@@ -1,0 +1,20 @@
+"""Shared benchmark helpers: CSV emission + timing."""
+from __future__ import annotations
+
+import os
+import time
+
+ART = os.path.join(os.path.dirname(__file__), "artifacts")
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    print(f"{name},{us_per_call:.2f},{derived}")
+
+
+def timer():
+    return time.perf_counter()
+
+
+def ensure_art():
+    os.makedirs(ART, exist_ok=True)
+    return ART

@@ -1,0 +1,61 @@
+"""Fig. 8: objective value after solving each subproblem of the two-scale
+algorithm (t_max = 3.0 s). Paper claim: the objective drops significantly
+after each of SUBP1/2/3 and the BCD iteration converges."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.configs.base import GenFVConfig
+from repro.core import bandwidth as bw
+from repro.core import channel, gpu_model, mobility, power as pw
+from repro.core.selection import select
+from repro.core.two_scale import plan_round
+
+MODEL_BITS = 11.2e6 * 32
+
+
+def run() -> None:
+    cfg = GenFVConfig(t_max=3.0)
+    rng = np.random.default_rng(11)
+    hists = rng.dirichlet(np.full(10, 0.5), size=40)
+    sizes = rng.integers(500, 2000, size=40)
+    fleet = mobility.sample_fleet(rng, cfg, hists, sizes)
+    t0 = time.perf_counter()
+
+    # stage 0: all in-range vehicles, equal share, min power
+    n0 = channel.noise_watts(cfg)
+    def stage_obj(sub, l, phi):
+        d = np.array([mobility.rsu_distance(cfg, v.x) for v in sub])
+        bp = cfg.unit_channel_gain * d ** (-cfg.path_loss_exp) / n0
+        t_cp = np.array([gpu_model.train_time(v, 8) for v in sub])
+        t_mu = pw.t_of_phi(MODEL_BITS, l * cfg.subcarrier_bw, bp, phi)
+        return float(np.max(t_cp + t_mu))
+
+    obj0 = stage_obj(fleet, bw.equal_share(len(fleet), cfg.num_subcarriers),
+                     np.full(len(fleet), cfg.phi_min))
+
+    sel = select(cfg, fleet, MODEL_BITS, 8)
+    sub = [fleet[i] for i in np.flatnonzero(sel.alpha)]
+    if not sub:
+        emit("fig8_subproblems/none_selected", 0.0, "no feasible vehicles")
+        return
+    obj1 = stage_obj(sub, bw.equal_share(len(sub), cfg.num_subcarriers),
+                     np.full(len(sub), cfg.phi_min))
+
+    plan = plan_round(cfg, fleet, MODEL_BITS, batches=8)
+    objs = [obj0, obj1] + plan.history
+    dt = (time.perf_counter() - t0) * 1e6
+    stages = ["init(all,equal,phimin)", "after_SUBP1"] + \
+             [f"BCD_iter{i+1}" for i in range(len(plan.history))]
+    for s, o in zip(stages, objs):
+        emit(f"fig8_subproblems/{s}", dt, f"objective={o:.3f}s")
+    emit("fig8_subproblems/summary", dt,
+         f"monotone={all(a >= b - 1e-6 for a, b in zip(objs, objs[1:]))} "
+         f"total_drop={objs[0] - objs[-1]:.3f}s")
+
+
+if __name__ == "__main__":
+    run()

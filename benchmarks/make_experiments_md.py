@@ -1,0 +1,115 @@
+"""Regenerate the §Dry-run / §Roofline tables of EXPERIMENTS.md from the
+dry-run artifacts. The narrative sections are maintained by hand; this
+script rewrites only the blocks between the AUTOGEN markers.
+
+  PYTHONPATH=src python benchmarks/make_experiments_md.py
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import re
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+ART = os.path.join(ROOT, "benchmarks", "artifacts")
+ART_OPT = os.path.join(ROOT, "benchmarks", "artifacts_opt")
+MD = os.path.join(ROOT, "EXPERIMENTS.md")
+
+
+def load(d):
+    out = {}
+    for fn in sorted(glob.glob(os.path.join(d, "dryrun_*.json"))):
+        r = json.load(open(fn))
+        mesh = "2x16x16" if r.get("mesh", {}).get("pod") else "16x16"
+        out[(r["arch"], r["shape"], mesh)] = r
+    return out
+
+
+def fmt(x):
+    if x is None:
+        return "—"
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x * 1e3:.1f}ms"
+    return f"{x * 1e6:.0f}us"
+
+
+def gib(b):
+    return f"{b / 2**30:.1f}"
+
+
+def roofline_table(recs, mesh="16x16", opt=None):
+    lines = ["| arch | shape | compute | memory | collective | dominant | "
+             "useful | HBM/dev (arg+temp) |" + (" opt: compute / temp / useful |" if opt else ""),
+             "|---|---|---|---|---|---|---|---|" + ("---|" if opt else "")]
+    for (arch, shape, m), r in sorted(recs.items()):
+        if m != mesh:
+            continue
+        if r.get("skipped"):
+            lines.append(f"| {arch} | {shape} | SKIP — {r['note'][:60]} |||||||"
+                         + ("|" if opt else ""))
+            continue
+        mem = r["memory"]
+        extra = ""
+        if opt:
+            o = opt.get((arch, shape, m))
+            if o and not o.get("skipped"):
+                extra = (f" {fmt(o['compute_term_s'])} / "
+                         f"{gib(o['memory'].get('temp_size_in_bytes', 0))}GiB / "
+                         f"{o['useful_flops_ratio'] and round(o['useful_flops_ratio'], 2)} |")
+            else:
+                extra = " — |"
+        lines.append(
+            f"| {arch} | {shape} | {fmt(r['compute_term_s'])} "
+            f"| {fmt(r['memory_term_s'])} | {fmt(r['collective_term_s'])} "
+            f"| {r['dominant']} "
+            f"| {r['useful_flops_ratio'] and round(r['useful_flops_ratio'], 2)} "
+            f"| {gib(mem.get('argument_size_in_bytes', 0))}+"
+            f"{gib(mem.get('temp_size_in_bytes', 0))}GiB |" + extra)
+    return "\n".join(lines)
+
+
+def dryrun_summary(recs):
+    lines = ["| arch | shape | mesh | compile | params | collective bytes "
+             "(global) | by kind |", "|---|---|---|---|---|---|---|"]
+    for (arch, shape, m), r in sorted(recs.items()):
+        if r.get("skipped"):
+            continue
+        kinds = ", ".join(f"{k.split('-')[-1]}={v / 2**30:.0f}G"
+                          for k, v in sorted(r["collective_by_kind"].items())
+                          if v > 2**30)
+        lines.append(f"| {arch} | {shape} | {m} | {r['compile_s']:.0f}s "
+                     f"| {r['params'] / 1e9:.2f}B "
+                     f"| {r['collective_bytes_global'] / 2**30:.0f} GiB "
+                     f"| {kinds} |")
+    return "\n".join(lines)
+
+
+def inject(md: str, marker: str, content: str) -> str:
+    start = f"<!-- AUTOGEN:{marker} -->"
+    end = f"<!-- /AUTOGEN:{marker} -->"
+    pat = re.compile(re.escape(start) + ".*?" + re.escape(end), re.S)
+    return pat.sub(start + "\n" + content + "\n" + end, md)
+
+
+def main():
+    recs = load(ART)
+    opt = load(ART_OPT)
+    md = open(MD).read()
+    md = inject(md, "roofline-sp", roofline_table(recs, "16x16", opt))
+    md = inject(md, "roofline-mp", roofline_table(recs, "2x16x16"))
+    md = inject(md, "dryrun", dryrun_summary(recs))
+    n_ok = sum(1 for r in recs.values() if not r.get("skipped") and not r.get("error"))
+    n_skip = sum(1 for r in recs.values() if r.get("skipped"))
+    md = inject(md, "counts",
+                f"**{len(recs)} combinations: {n_ok} compiled, {n_skip} "
+                f"skipped per long-context policy, "
+                f"{len(recs) - n_ok - n_skip} errors.**")
+    open(MD, "w").write(md)
+    print("EXPERIMENTS.md updated")
+
+
+if __name__ == "__main__":
+    main()

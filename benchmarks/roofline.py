@@ -1,0 +1,66 @@
+"""Roofline reader: aggregates the dry-run artifacts into the §Roofline table
+(compute/memory/collective terms, dominant bottleneck, MODEL_FLOPS ratio).
+Run after `python -m repro.launch.dryrun --all --both-meshes`."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import ART, emit
+
+SHAPES = ("train_4k", "prefill_32k", "decode_32k", "long_500k")
+
+
+def load() -> list[dict]:
+    recs = []
+    for fn in sorted(glob.glob(os.path.join(ART, "dryrun_*.json"))):
+        with open(fn) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def fmt_s(x) -> str:
+    if x is None:
+        return "-"
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x * 1e3:.2f}ms"
+    return f"{x * 1e6:.1f}us"
+
+
+def run() -> None:
+    recs = load()
+    if not recs:
+        emit("roofline/missing", 0.0,
+             "no dry-run artifacts; run repro.launch.dryrun --all first")
+        return
+    n_ok = n_skip = n_err = 0
+    for r in recs:
+        mesh = "2x16x16" if r.get("mesh", {}).get("pod") else "16x16"
+        name = f"roofline/{r['arch']}/{r['shape']}/{mesh}"
+        if r.get("error"):
+            n_err += 1
+            emit(name, 0.0, f"ERROR {r['error'][:80]}")
+            continue
+        if r.get("skipped"):
+            n_skip += 1
+            emit(name, 0.0, f"SKIP {r.get('note', '')[:80]}")
+            continue
+        n_ok += 1
+        ratio = r.get("useful_flops_ratio")
+        emit(name, r.get("compile_s", 0.0) * 1e6,
+             f"compute={fmt_s(r['compute_term_s'])} "
+             f"mem={fmt_s(r['memory_term_s'])} "
+             f"coll={fmt_s(r['collective_term_s'])} "
+             f"dom={r['dominant']} "
+             f"useful={ratio and round(ratio, 3)} "
+             f"hbm/dev={r['memory'].get('argument_size_in_bytes', 0) / 2**30:.2f}"
+             f"+{r['memory'].get('temp_size_in_bytes', 0) / 2**30:.2f}GiB")
+    emit("roofline/summary", 0.0,
+         f"ok={n_ok} skipped={n_skip} errors={n_err}")
+
+
+if __name__ == "__main__":
+    run()

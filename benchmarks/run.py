@@ -1,0 +1,58 @@
+"""Benchmark driver: one module per paper table/figure + the roofline
+reader. Prints ``name,us_per_call,derived`` CSV lines.
+
+  PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig5,...]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+from benchmarks import (fig5_emd, fig6_selection, fig7_power,
+                        fig8_subproblems, fig9_generation, fig10_noniid,
+                        roofline, theorem1)
+
+MODULES = {
+    "fig5": fig5_emd.run,
+    "fig6": fig6_selection.run,
+    "fig7": fig7_power.run,
+    "fig8": fig8_subproblems.run,
+    "fig9": fig9_generation.run,
+    "fig10": fig10_noniid.run,
+    "theorem1": theorem1.run,
+    "roofline": roofline.run,
+}
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated module keys")
+    ap.add_argument("--quick", action="store_true",
+                    help="skip the FL-training figures (fig6, fig10)")
+    args = ap.parse_args()
+
+    keys = list(MODULES)
+    if args.only:
+        keys = [k for k in args.only.split(",") if k in MODULES]
+    if args.quick:
+        keys = [k for k in keys if k not in ("fig6", "fig10")]
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for k in keys:
+        t0 = time.perf_counter()
+        try:
+            MODULES[k]()
+        except Exception as e:
+            failures += 1
+            print(f"{k}/FAILED,0.00,{type(e).__name__}: {e}")
+            traceback.print_exc(file=sys.stderr)
+        print(f"{k}/module_total,{(time.perf_counter() - t0) * 1e6:.0f},")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

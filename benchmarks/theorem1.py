@@ -1,0 +1,39 @@
+"""Theorem 1: convergence-bound curves and the EMD-weighting rationale.
+
+Shows the bound (i) contracts geometrically in hT, (ii) worsens with the
+gradient-divergence bounds lambda_n = EMD_n * g_n, and (iii) is minimized
+at an interior kappa2 when the AIGC divergence lambda_a is below the fleet
+average — the analytical justification for eq. (4)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import convergence
+from repro.core.emd import kappas
+
+
+def run() -> None:
+    p = convergence.ConvergenceParams(eta=0.01, varrho=10.0, mu=0.5, h=4,
+                                      lambda_a=0.08)
+    rhos = np.full(8, 1 / 8)
+    t0 = time.perf_counter()
+    for emd_bar in (0.4, 0.8, 1.2, 1.6):
+        lams = np.full(8, emd_bar * 0.25)        # lambda_n = EMD_n * g_n
+        k1, k2 = kappas(emd_bar)
+        b_paper = convergence.bound(p, 200, rhos, lams, k1, k2)
+        b_noaug = convergence.bound(p, 200, rhos, lams, 1.0, 0.0)
+        # best kappa2 on a grid
+        grid = [(kk2, convergence.bound(p, 200, rhos, lams, 1 - kk2, kk2))
+                for kk2 in np.linspace(0, 1, 21)]
+        k2_star, b_star = min(grid, key=lambda g: g[1])
+        emit(f"theorem1/emd{emd_bar}", (time.perf_counter() - t0) * 1e6,
+             f"bound_paper_k2={b_paper:.4f} bound_no_aug={b_noaug:.4f} "
+             f"paper_beats_noaug={b_paper <= b_noaug + 1e-9} "
+             f"k2_paper={k2:.3f} k2_grid_opt={k2_star:.2f}")
+
+
+if __name__ == "__main__":
+    run()

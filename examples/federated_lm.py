@@ -1,0 +1,100 @@
+"""GenFV on a language-model backbone (DESIGN.md §5: the technique is
+architecture-agnostic — it consumes label/token distributions and parameter
+trees, not images).
+
+Vehicles hold non-IID token streams (each sees only a slice of the vocab —
+the LM analogue of Dirichlet label skew); EMD is computed over token
+unigram histograms; the RSU "generates" synthetic text from the full-vocab
+reference stream (the token-level AIGC service) and trains the augmented
+model; aggregation is eq. (4) verbatim.
+
+  PYTHONPATH=src python examples/federated_lm.py [--arch qwen1.5-0.5b]
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.emd import aggregate, data_weights, emd as emd_fn, kappas, mean_emd
+from repro.data.synthetic import make_token_dataset
+from repro.models import api
+from repro.models.transformer import loss_fn
+from repro.optim import make_optimizer, constant_schedule
+
+
+def token_histogram(tokens, vocab, bins=16):
+    h = np.bincount(np.asarray(tokens) % bins, minlength=bins).astype(float)
+    return h / max(h.sum(), 1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1.5-0.5b")
+    ap.add_argument("--rounds", type=int, default=6)
+    ap.add_argument("--clients", type=int, default=4)
+    ap.add_argument("--local-steps", type=int, default=4)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).reduced()
+    B, S = 4, 48
+    key = jax.random.PRNGKey(0)
+    global_params = api.init_params(key, cfg)
+    opt = make_optimizer("sgd", constant_schedule(0.3))
+    step = jax.jit(api.make_train_step(cfg, opt, clip_norm=1.0))
+
+    # non-IID client corpora: client i only sees tokens in its vocab slice
+    rng = np.random.default_rng(0)
+    full = make_token_dataset(cfg.vocab_size, 80_000, seed=1)
+    slice_w = cfg.vocab_size // args.clients
+    corpora, hists = [], []
+    for i in range(args.clients):
+        lo = i * slice_w
+        toks = lo + (full[i::args.clients] % slice_w)
+        corpora.append(toks.astype(np.int32))
+        hists.append(token_histogram(toks, cfg.vocab_size))
+    emds = [emd_fn(h) for h in hists]
+    print(f"[federated-lm] {args.arch} (reduced), {args.clients} clients, "
+          f"token-EMDs: {[round(e, 2) for e in emds]}")
+
+    def local_train(params, corpus, steps, rng):
+        state = opt.init(params)
+        loss = 0.0
+        for _ in range(steps):
+            start = int(rng.integers(0, len(corpus) - B * (S + 1)))
+            chunk = corpus[start:start + B * (S + 1)].reshape(B, S + 1)
+            batch = {"tokens": jnp.asarray(chunk[:, :-1]),
+                     "targets": jnp.asarray(chunk[:, 1:]),
+                     "mask": jnp.ones((B, S), jnp.float32)}
+            params, state, m = step(params, state, batch)
+            loss = float(m["loss"])
+        return params, loss
+
+    eval_chunk = full[:B * (S + 1)].reshape(B, S + 1)
+    eval_batch = {"tokens": jnp.asarray(eval_chunk[:, :-1]),
+                  "targets": jnp.asarray(eval_chunk[:, 1:]),
+                  "mask": jnp.ones((B, S), jnp.float32)}
+    eval_loss = jax.jit(lambda p: loss_fn(p, cfg, eval_batch)[0])
+
+    for t in range(args.rounds):
+        models, sizes = [], []
+        for i, corpus in enumerate(corpora):
+            m, _ = local_train(global_params, corpus, args.local_steps, rng)
+            models.append(m)
+            sizes.append(len(corpus))
+        # token-level AIGC: the RSU samples from the reference distribution
+        aug, _ = local_train(global_params, full, args.local_steps, rng)
+        emd_bar = mean_emd(emds)
+        global_params = aggregate(models, data_weights(sizes), aug, emd_bar)
+        k1, k2 = kappas(emd_bar)
+        print(f"  round {t}: global-eval loss {float(eval_loss(global_params)):.4f} "
+              f"(kappa2={k2:.3f})")
+    print("[federated-lm] done — eq. (4) applied unchanged to an LM pytree")
+
+
+if __name__ == "__main__":
+    main()

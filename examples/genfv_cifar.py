@@ -1,0 +1,50 @@
+"""End-to-end GenFV driver (paper Sec. VI): federated training of the
+ResNet-18-style CNN on the CIFAR10-like procedural dataset with Dirichlet
+non-IID partitions, comparing GenFV against FL-only and FedAvg.
+
+  PYTHONPATH=src python examples/genfv_cifar.py [--rounds 12] [--alpha 0.1]
+
+This is the "train a ~100M-model-class workload for a few hundred steps"
+driver at CPU scale: 12 rounds x 16 vehicles x 4 local steps = ~768 SGD
+steps through the federated pipeline.
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import argparse
+
+import numpy as np
+
+from repro.configs.base import GenFVConfig
+from repro.fl import GenFVRunner, RunConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=12)
+    ap.add_argument("--alpha", type=float, default=0.1)
+    ap.add_argument("--dataset", default="cifar10")
+    ap.add_argument("--schemes", default="genfv,fl_only,fedavg")
+    args = ap.parse_args()
+
+    fl_cfg = GenFVConfig(batch_size=16, local_steps=4, num_vehicles=16)
+    results = {}
+    for scheme in args.schemes.split(","):
+        print(f"\n=== {scheme} (alpha={args.alpha}) ===")
+        runner = GenFVRunner(
+            RunConfig(dataset=args.dataset, alpha=args.alpha,
+                      rounds=args.rounds, strategy=scheme, train_size=2000,
+                      test_size=192, width_mult=0.125, seed=3,
+                      model_bits=11.2e6 * 32),
+            fl_cfg=fl_cfg)
+        res = runner.train(verbose=True)
+        results[scheme] = res.curve("accuracy")
+
+    print("\n=== summary (mean of last 3 rounds) ===")
+    for scheme, acc in results.items():
+        print(f"  {scheme:10s} acc={np.mean(acc[-3:]):.3f}  "
+              f"curve={[round(a, 3) for a in acc.tolist()]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,13 @@
+"""Train any assigned architecture end-to-end on the synthetic token stream
+(reduced config, CPU-runnable), exercising the same train_step the dry-run
+lowers for the production mesh.
+
+  PYTHONPATH=src python examples/train_backbone.py --arch olmoe-1b-7b --steps 30
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.train import main
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,83 @@
+"""Checkpointing: pytree <-> .npz with path-string keys + a JSON manifest.
+
+`save_tree` stores every leaf under its tree path ("params/groups/0/attn/wq")
+so checkpoints are inspectable with plain numpy. `restore_into` reloads into
+a template pytree (shape/dtype checked); `restore_tree` reloads standalone
+(dicts/lists/tuples reconstructed from the manifest).
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def save_tree(path: str, tree: Any, metadata: dict | None = None) -> None:
+    leaves_with_paths, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    arrays = {}
+    keys = []
+    for p, leaf in leaves_with_paths:
+        k = _path_str(p) or "leaf"
+        keys.append(k)
+        arrays[k] = np.asarray(leaf)
+    manifest = {"keys": keys, "treedef": str(treedef),
+                "structure": _structure_of(tree),
+                "metadata": metadata or {}}
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    np.savez(path, __manifest__=json.dumps(manifest), **arrays)
+
+
+def _structure_of(tree) -> Any:
+    """JSON-serializable skeleton: leaves -> None."""
+    if isinstance(tree, dict):
+        return {"__kind__": "dict",
+                "items": {k: _structure_of(v) for k, v in tree.items()}}
+    if isinstance(tree, (list, tuple)):
+        return {"__kind__": type(tree).__name__,
+                "items": [_structure_of(v) for v in tree]}
+    return None
+
+
+def _fill(skel, leaves_iter):
+    if skel is None:
+        return next(leaves_iter)
+    if skel["__kind__"] == "dict":
+        return {k: _fill(v, leaves_iter) for k, v in skel["items"].items()}
+    items = [_fill(v, leaves_iter) for v in skel["items"]]
+    return items if skel["__kind__"] == "list" else tuple(items)
+
+
+def restore_tree(path: str) -> Any:
+    data = np.load(path, allow_pickle=False)
+    manifest = json.loads(str(data["__manifest__"]))
+    leaves = [data[k] for k in manifest["keys"]]
+    return _fill(manifest["structure"], iter(leaves))
+
+
+def restore_into(template: Any, path: str) -> Any:
+    data = np.load(path, allow_pickle=False)
+    manifest = json.loads(str(data["__manifest__"]))
+    leaves = [data[k] for k in manifest["keys"]]
+    t_leaves, treedef = jax.tree_util.tree_flatten(template)
+    if len(t_leaves) != len(leaves):
+        raise ValueError(f"leaf count mismatch: template {len(t_leaves)} "
+                         f"vs checkpoint {len(leaves)}")
+    for t, l in zip(t_leaves, leaves):
+        if tuple(t.shape) != tuple(l.shape):
+            raise ValueError(f"shape mismatch {t.shape} vs {l.shape}")
+    return jax.tree_util.tree_unflatten(treedef, leaves)

@@ -1,0 +1,292 @@
+"""Config system for repro: model architectures, input shapes, hardware.
+
+Every assigned architecture is a `ModelConfig` (exact sizes from its source
+paper / model card, cited in the per-arch file). `InputShape` captures the
+four assigned workload shapes. `HardwareSpec` carries the TPU v5e constants
+used by the roofline analysis (these are *target* numbers; the container
+runs on CPU and only lowers/compiles against them).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+# ---------------------------------------------------------------------------
+# Layer kinds used in repeating block patterns.
+# ---------------------------------------------------------------------------
+ATTN_GLOBAL = "global"    # full causal attention
+ATTN_LOCAL = "local"      # sliding-window causal attention
+BLOCK_MLSTM = "mlstm"     # xLSTM matrix-memory block
+BLOCK_SLSTM = "slstm"     # xLSTM scalar-memory block
+BLOCK_RGLRU = "rglru"     # RG-LRU recurrent block (Griffin)
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    experts_per_token: int
+    # d_ff of each expert (may differ from the dense d_ff notion)
+    d_expert: int
+    router_aux_loss: float = 0.01
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """One architecture. All sizes are the FULL assigned sizes; reduced smoke
+    variants are derived with `.reduced()`."""
+
+    name: str
+    family: str                      # dense | moe | ssm | hybrid | vlm | audio
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    citation: str = ""
+
+    head_dim: Optional[int] = None   # default: d_model // num_heads
+    # --- attention options ---------------------------------------------
+    qkv_bias: bool = False
+    attn_softcap: Optional[float] = None     # tanh soft-cap on attention logits
+    final_softcap: Optional[float] = None    # tanh soft-cap on LM-head logits
+    sliding_window: Optional[int] = None     # window for ATTN_LOCAL layers
+    rope_theta: float = 10000.0
+    # Repeating block pattern; tiled to num_layers. ("global",) = vanilla.
+    pattern: Tuple[str, ...] = (ATTN_GLOBAL,)
+    # --- mlp ---------------------------------------------------------------
+    mlp_type: str = "swiglu"                 # swiglu | geglu | gelu
+    # --- moe ----------------------------------------------------------------
+    moe: Optional[MoEConfig] = None
+    # --- ssm / hybrid --------------------------------------------------------
+    lru_width: Optional[int] = None          # RG-LRU recurrence width
+    conv_kernel: int = 4                     # temporal-conv width in recurrent blocks
+    proj_factor: float = 2.0                 # xLSTM up-projection factor
+    # --- embeddings / norm ----------------------------------------------------
+    norm: str = "rmsnorm"                    # rmsnorm | layernorm
+    tie_embeddings: bool = True
+    scale_embed: bool = False                # gemma-style sqrt(d_model) embed scaling
+    # --- enc-dec (audio) -------------------------------------------------------
+    encoder_layers: int = 0                  # >0 => encoder-decoder (whisper)
+    encoder_seq: int = 1500                  # post-conv encoder frames (whisper stub)
+    # --- modality frontend stub -------------------------------------------------
+    modality: str = "text"                   # text | vision | audio
+    # number of (precomputed) frontend embedding tokens prepended for vlm
+    frontend_tokens: int = 0
+    # --- training ------------------------------------------------------------------
+    schedule: str = "cosine"                 # cosine | wsd
+    # Pad the embedding/unembedding vocab up to a multiple (0 = off). Padded
+    # logit columns are masked to -1e9 in unembed; used when the true vocab
+    # does not divide the tensor-parallel axis (§Perf hillclimb 2).
+    pad_vocab_multiple: int = 0
+    # --- long-context policy ----------------------------------------------------------
+    # Whether serve_step at 500k is runnable (sub-quadratic / windowed decode).
+    supports_long_context: bool = False
+    long_context_note: str = ""
+
+    # ------------------------------------------------------------------
+    def __post_init__(self):
+        if self.head_dim is None:
+            object.__setattr__(self, "head_dim", self.d_model // self.num_heads)
+        assert self.num_heads % max(self.num_kv_heads, 1) == 0, self.name
+
+    # ------------------------------------------------------------------
+    @property
+    def layer_kinds(self) -> Tuple[str, ...]:
+        """Per-layer kinds, pattern tiled to num_layers."""
+        reps = -(-self.num_layers // len(self.pattern))
+        return (self.pattern * reps)[: self.num_layers]
+
+    @property
+    def padded_vocab_size(self) -> int:
+        if self.pad_vocab_multiple <= 0:
+            return self.vocab_size
+        m = self.pad_vocab_multiple
+        return -(-self.vocab_size // m) * m
+
+    @property
+    def is_encdec(self) -> bool:
+        return self.encoder_layers > 0
+
+    @property
+    def is_recurrent_decode(self) -> bool:
+        """True if decode state is recurrent (O(1)) rather than a KV cache."""
+        return self.family == "ssm"
+
+    # ------------------------------------------------------------------
+    def reduced(self, num_layers: int = 2, d_model: int = 256,
+                vocab: int = 512, seq_cap: int = 128) -> "ModelConfig":
+        """Smoke-test variant of the same family: <=2 layers, d_model<=512,
+        <=4 experts, same block pattern / options."""
+        d_model = min(d_model, 512)
+        heads = max(1, min(self.num_heads, 4))
+        kv = max(1, min(self.num_kv_heads, heads))
+        while heads % kv:
+            kv -= 1
+        head_dim = max(8, d_model // heads)
+        moe = None
+        if self.moe is not None:
+            k = min(self.moe.experts_per_token, 2)
+            moe = MoEConfig(num_experts=4, experts_per_token=k,
+                            d_expert=max(8, d_model // 2),
+                            router_aux_loss=self.moe.router_aux_loss)
+        # Shrink the block pattern to one instance of each distinct kind so the
+        # smoke variant keeps every code path while staying at ~2 layers.
+        pattern = tuple(dict.fromkeys(self.pattern))
+        return dataclasses.replace(
+            self,
+            name=self.name + "-smoke",
+            pattern=pattern,
+            num_layers=max(num_layers, len(pattern)),
+            d_model=d_model,
+            num_heads=heads,
+            num_kv_heads=kv,
+            head_dim=head_dim,
+            d_ff=0 if self.d_ff == 0 else max(16, d_model * 2),
+            vocab_size=min(self.vocab_size, vocab),
+            sliding_window=None if self.sliding_window is None else min(self.sliding_window, seq_cap // 2),
+            lru_width=None if self.lru_width is None else d_model,
+            moe=moe,
+            encoder_layers=0 if self.encoder_layers == 0 else 2,
+            encoder_seq=min(self.encoder_seq, 64),
+            frontend_tokens=min(self.frontend_tokens, 16),
+        )
+
+    # ------------------------------------------------------------------
+    # Parameter counting (used by roofline + memory budgeting).
+    def param_count(self) -> int:
+        return sum(self._param_terms().values())
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: only routed experts)."""
+        terms = self._param_terms()
+        if self.moe is not None:
+            frac = self.moe.experts_per_token / self.moe.num_experts
+            terms["moe_experts"] = int(terms["moe_experts"] * frac)
+        return sum(terms.values())
+
+    def _param_terms(self) -> dict:
+        d, hd = self.d_model, self.head_dim
+        nq, nkv = self.num_heads, self.num_kv_heads
+        terms = {"embed": self.vocab_size * d}
+        if not self.tie_embeddings:
+            terms["lm_head"] = self.vocab_size * d
+        attn = d * nq * hd + 2 * d * nkv * hd + nq * hd * d
+        if self.qkv_bias:
+            attn += (nq + 2 * nkv) * hd
+        if self.mlp_type in ("swiglu", "geglu"):
+            mlp = 3 * d * self.d_ff
+        else:
+            mlp = 2 * d * self.d_ff
+        n_attn = n_mlp = n_rec = n_moe = 0
+        for kind in self.layer_kinds:
+            if kind in (ATTN_GLOBAL, ATTN_LOCAL):
+                n_attn += 1
+                if self.moe is not None:
+                    n_moe += 1
+                elif self.d_ff > 0:
+                    n_mlp += 1
+            elif kind == BLOCK_RGLRU:
+                n_rec += 1
+                n_mlp += 1
+            elif kind in (BLOCK_MLSTM, BLOCK_SLSTM):
+                n_rec += 1
+        terms["attn"] = n_attn * attn
+        terms["mlp"] = n_mlp * mlp
+        if self.moe is not None:
+            e = self.moe
+            expert = 3 * d * e.d_expert if self.mlp_type in ("swiglu", "geglu") else 2 * d * e.d_expert
+            terms["moe_experts"] = n_moe * e.num_experts * expert
+            terms["moe_router"] = n_moe * d * e.num_experts
+        if n_rec:
+            if self.family == "ssm":
+                # xLSTM mLSTM block: up-proj 2x, q/k/v projections, out-proj.
+                pf = self.proj_factor
+                inner = int(d * pf)
+                per = d * inner * 2 + 3 * inner * inner // max(self.num_heads, 1) + inner * d
+                terms["recurrent"] = n_rec * per
+            else:
+                w = self.lru_width or d
+                # Griffin recurrent block: in/out proj + gates + conv.
+                per = 2 * d * w + 3 * w + w * self.conv_kernel + w * d + 2 * w * w
+                terms["recurrent"] = n_rec * per
+        if self.encoder_layers:
+            terms["encoder"] = self.encoder_layers * (attn * 2 + mlp)  # self+cross approx
+        terms["norms"] = 2 * self.num_layers * d + d
+        return terms
+
+
+# ---------------------------------------------------------------------------
+# Input shapes (assigned).
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+INPUT_SHAPES = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}
+
+
+# ---------------------------------------------------------------------------
+# Target hardware (TPU v5e), used only for roofline math.
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class HardwareSpec:
+    peak_flops: float = 197e12        # bf16 FLOP/s per chip
+    hbm_bw: float = 819e9             # bytes/s per chip
+    hbm_bytes: float = 16 * 2**30     # capacity per chip
+    ici_bw: float = 50e9              # bytes/s per link
+
+
+V5E = HardwareSpec()
+
+
+# ---------------------------------------------------------------------------
+# FL / GenFV experiment config (paper Section VI defaults).
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class GenFVConfig:
+    num_vehicles: int = 40            # vehicles in RSU range (Poisson mean)
+    num_subcarriers: int = 20         # M
+    # Per-subchannel bandwidth. The paper fixes M=20 subcarriers but leaves W
+    # unspecified; 10 MHz makes a ResNet-18 upload ~2.3 s on one subcarrier,
+    # matching the paper's t_max ~ 3 s operating point (Fig. 7).
+    subcarrier_bw: float = 1e7        # W per subchannel (Hz)
+    noise_power_dbm: float = -174.0   # N0
+    phi_min: float = 0.1              # W
+    phi_max: float = 1.0              # W
+    rsu_tx_power_dbm: float = 40.0
+    path_loss_exp: float = 2.0        # gamma
+    unit_channel_gain: float = 1e-5   # h0
+    rsu_radius: float = 500.0         # r (m)
+    rsu_road_offset: float = 10.0     # e (m)
+    v_max: float = 120.0              # km/h
+    v_min: float = 10.0
+    m_max: int = 60                   # max vehicles on road segment
+    sigma_k: float = 0.1              # sigma = k * v_bar
+    t_max: float = 3.0                # max round time (s)
+    # Per-round energy budget. Unspecified in the paper; the eq. 6-8 GPU
+    # model puts local training alone at 6-19 J, so 20 J makes the energy
+    # constraint bind for slow-GPU vehicles without rejecting the fleet.
+    e_max: float = 20.0               # per-round energy budget (J)
+    local_steps: int = 4              # h
+    # RSU augmented-model steps per round = rsu_steps_factor * h. The RSU GPU
+    # is ~8x a vehicle GPU (Sec. IV-A5), so it fits more SGD inside the
+    # straggler window it is already waiting through.
+    rsu_steps_factor: int = 4
+    lr: float = 1e-4
+    batch_size: int = 64
+    dirichlet_alpha: float = 0.1
+    emd_threshold: float = 1.5        # \hat{EMD} (Table I)
+    # diffusion service
+    diffusion_steps: int = 50         # I
+    gen_batch: int = 64               # images per generation batch

@@ -1,0 +1,17 @@
+"""GenFV core — the paper's contribution (Sec. III-V):
+
+emd          EMD heterogeneity metric + weighted policy (eq. 3-4)
+convergence  Theorem 1 bound
+mobility     traffic-flow model, V2R holding time (eq. 24-27)
+channel      OFDMA uplink rate/delay/energy (eq. 9-11)
+gpu_model    GPU latency/power/energy (eq. 6-8)
+selection    SUBP1 + the four baseline selection policies
+bandwidth    SUBP2 Lagrange/KKT (Algorithm 1)
+power        SUBP3 SCA (Algorithm 2)
+generation   SUBP4 closed form (eq. 48)
+two_scale    Algorithm 3 joint BCD loop -> RoundPlan
+"""
+from repro.core import emd  # noqa: F401  (module; the emd() fn lives inside)
+from repro.core.emd import (aggregate, data_weights, emd_many, kappas,
+                            label_histogram, mean_emd)
+from repro.core.two_scale import RoundPlan, plan_round

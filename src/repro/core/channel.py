@@ -1,0 +1,40 @@
+"""OFDMA uplink model (paper Sec. IV-A4, eq. 9-11).
+
+r_n = l_n W log2(1 + phi_n h0 d_n^-gamma / N0)
+T_mu = s(omega) / r_n ;  E_mu = phi_n T_mu
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.configs.base import GenFVConfig
+
+
+def noise_watts(cfg: GenFVConfig) -> float:
+    """Noise power over one subchannel: N0[dBm/Hz] integrated over W."""
+    psd = 10 ** ((cfg.noise_power_dbm - 30.0) / 10.0)   # W/Hz
+    return psd * cfg.subcarrier_bw
+
+
+def snr(cfg: GenFVConfig, phi: float, dist: float) -> float:
+    """phi h0 d^-gamma / N0 (eq. 9 inner term)."""
+    return phi * cfg.unit_channel_gain * dist ** (-cfg.path_loss_exp) / noise_watts(cfg)
+
+
+def uplink_rate(cfg: GenFVConfig, l_n: float, phi: float, dist: float) -> float:
+    """Eq. (9): bits/s given l_n subcarriers (fractional l_n allowed by the
+    SUBP2 relaxation), power phi (W) and distance dist (m)."""
+    return l_n * cfg.subcarrier_bw * np.log2(1.0 + snr(cfg, phi, dist))
+
+
+def upload_time(cfg: GenFVConfig, model_bits: float, l_n: float, phi: float,
+                dist: float) -> float:
+    """Eq. (10)."""
+    r = uplink_rate(cfg, l_n, phi, dist)
+    return float(model_bits / max(r, 1e-9))
+
+
+def upload_energy(cfg: GenFVConfig, model_bits: float, l_n: float, phi: float,
+                  dist: float) -> float:
+    """Eq. (11)."""
+    return float(phi * upload_time(cfg, model_bits, l_n, phi, dist))

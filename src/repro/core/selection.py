@@ -1,0 +1,109 @@
+"""SUBP1 — large-communication-scale vehicle selection (paper Sec. V-A).
+
+alpha_n = 1  iff  (T_n^cp + T_n^mu <= T_bar_n) AND (EMD_n <= EMD_hat)
+with T_bar_n = min(t_hold_n, t_max)  (eq. 27-30).
+
+Feasibility is checked with nominal resources (one subcarrier, max power),
+since bandwidth/power are only optimized for the *selected* set afterwards.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List
+
+import numpy as np
+
+from repro.configs.base import GenFVConfig
+from repro.core import channel, gpu_model, mobility
+from repro.core.mobility import Vehicle
+
+
+@dataclass
+class SelectionResult:
+    alpha: np.ndarray                # [N] {0,1}
+    t_bar: np.ndarray                # [N] per-vehicle deadline (eq. 27)
+    t_cp: np.ndarray                 # nominal train time
+    t_mu: np.ndarray                 # nominal upload time
+    reasons: List[str]               # why each vehicle was kept/dropped
+
+
+def select(cfg: GenFVConfig, fleet: List[Vehicle], model_bits: float,
+           batches: int, emd_hat: float | None = None) -> SelectionResult:
+    emd_hat = cfg.emd_threshold if emd_hat is None else emd_hat
+    n = len(fleet)
+    alpha = np.zeros(n, np.int32)
+    t_bar = np.zeros(n)
+    t_cp = np.zeros(n)
+    t_mu = np.zeros(n)
+    reasons = []
+    for i, v in enumerate(fleet):
+        t_hold = mobility.holding_time(cfg, v.x, v.v)
+        t_bar[i] = min(t_hold, cfg.t_max)
+        t_cp[i] = gpu_model.train_time(v, batches)
+        d = mobility.rsu_distance(cfg, v.x)
+        t_mu[i] = channel.upload_time(cfg, model_bits, 1.0, v.phi_max, d)
+        if v.emd > emd_hat:
+            reasons.append(f"v{v.vid}: dropped (EMD {v.emd:.2f} > {emd_hat})")
+        elif t_cp[i] + t_mu[i] > t_bar[i]:
+            reasons.append(
+                f"v{v.vid}: dropped (T {t_cp[i] + t_mu[i]:.2f}s > Tbar {t_bar[i]:.2f}s)")
+        else:
+            alpha[i] = 1
+            reasons.append(f"v{v.vid}: selected")
+    return SelectionResult(alpha, t_bar, t_cp, t_mu, reasons)
+
+
+def select_random(rng: np.random.Generator, fleet, k: int) -> np.ndarray:
+    """FedAvg baseline: uniform random selection of k vehicles."""
+    alpha = np.zeros(len(fleet), np.int32)
+    idx = rng.choice(len(fleet), size=min(k, len(fleet)), replace=False)
+    alpha[idx] = 1
+    return alpha
+
+
+def select_no_emd(cfg: GenFVConfig, fleet, model_bits: float,
+                  batches: int) -> np.ndarray:
+    """'No EMD' baseline: keep only the deadline constraint (eq. 28)."""
+    res = select(cfg, fleet, model_bits, batches, emd_hat=np.inf)
+    return res.alpha
+
+
+def select_madca(cfg: GenFVConfig, fleet, model_bits: float, batches: int,
+                 success_prob: float = 0.8) -> np.ndarray:
+    """MADCA-FL-style baseline [5]: select vehicles whose probability of
+    finishing within their holding time exceeds `success_prob`, ignoring
+    data heterogeneity. Completion probability is estimated from the
+    speed-noise model (sigma = k*v)."""
+    alpha = np.zeros(len(fleet), np.int32)
+    for i, v in enumerate(fleet):
+        t_need = (gpu_model.train_time(v, batches)
+                  + channel.upload_time(cfg, model_bits, 1.0, v.phi_max,
+                                        mobility.rsu_distance(cfg, v.x)))
+        # holding time at +/- 1.28 sigma speed (10%/90% quantiles)
+        s = mobility.remaining_distance(cfg, v.x, v.v)
+        v_hi = abs(v.v) * (1 + 1.28 * cfg.sigma_k) / 3.6
+        t_hold_lo = max(s, 0.0) / max(v_hi, 1e-9)
+        p_ok = 1.0 if t_need <= t_hold_lo else (
+            0.0 if t_need > mobility.holding_time(cfg, v.x, v.v) else 0.5)
+        if p_ok >= success_prob and t_need <= cfg.t_max:
+            alpha[i] = 1
+    return alpha
+
+
+def select_ocean(cfg: GenFVConfig, fleet, model_bits: float, batches: int,
+                 round_idx: int, total_rounds: int) -> np.ndarray:
+    """OCEAN-a-style baseline [30]: long-term energy-aware selection with a
+    'later-is-better' participation ramp — the admitted fraction grows with
+    the round index."""
+    frac = 0.3 + 0.7 * min(round_idx / max(total_rounds - 1, 1), 1.0)
+    scores = []
+    for v in fleet:
+        e = (gpu_model.train_energy(v, batches)
+             + channel.upload_energy(cfg, model_bits, 1.0, v.phi_max,
+                                     mobility.rsu_distance(cfg, v.x)))
+        scores.append(e)
+    order = np.argsort(scores)                      # cheapest energy first
+    k = max(1, int(round(frac * len(fleet))))
+    alpha = np.zeros(len(fleet), np.int32)
+    alpha[order[:k]] = 1
+    return alpha

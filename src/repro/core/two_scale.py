@@ -1,0 +1,114 @@
+"""Algorithm 3 — Joint Two-Scale Algorithm (paper Sec. V-C).
+
+Large communication scale: label sharing + SUBP1 vehicle selection.
+Small computation scale:   BCD over SUBP2 (bandwidth) -> SUBP3 (power)
+                           -> SUBP4 (generation) until all three deltas
+                           fall below the epsilons.
+
+Outputs a `RoundPlan`: who participates, their subcarriers/powers, the
+number of images the RSU generates, and the full delay/energy ledger that
+the FL runtime uses as the simulated round clock.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List
+
+import numpy as np
+
+from repro.configs.base import GenFVConfig
+from repro.core import bandwidth as bw
+from repro.core import channel, gpu_model, power as pw
+from repro.core.generation import DiffusionService, inference_time, optimal_generation
+from repro.core.gpu_model import rsu_train_time
+from repro.core.mobility import Vehicle, rsu_distance
+from repro.core.selection import SelectionResult, select
+
+
+@dataclass
+class RoundPlan:
+    alpha: np.ndarray                 # [N] selection indicator
+    selected: List[int]               # indices with alpha=1
+    l: np.ndarray                     # [K] subcarriers per selected vehicle
+    phi: np.ndarray                   # [K] tx power per selected vehicle
+    b_gen: int                        # images to generate (SUBP4)
+    t_cp: np.ndarray                  # [K] per-vehicle training delay
+    t_mu: np.ndarray                  # [K] per-vehicle upload delay
+    t_bar: float                      # max_n (t_cp + t_mu) — system delay
+    e_total: np.ndarray               # [K] per-vehicle energy
+    t_rsu: float                      # RSU generation + augmentation time
+    bcd_iters: int = 0
+    history: List[float] = field(default_factory=list)   # T_bar per BCD iter
+    selection: SelectionResult | None = None
+
+
+def plan_round(cfg: GenFVConfig, fleet: List[Vehicle], model_bits: float,
+               batches: int, b_prev: int = 0,
+               svc: DiffusionService | None = None,
+               eps: float = 1e-3, max_bcd: int = 20,
+               alpha_override: np.ndarray | None = None) -> RoundPlan:
+    svc = svc or DiffusionService(steps=cfg.diffusion_steps)
+
+    # ---- Large communication scale: label share + SUBP1 ------------------
+    sel = select(cfg, fleet, model_bits, batches)
+    alpha = sel.alpha if alpha_override is None else np.asarray(alpha_override)
+    idx = [i for i in range(len(fleet)) if alpha[i] == 1]
+    if not idx:
+        return RoundPlan(alpha, [], np.zeros(0), np.zeros(0), 0,
+                         np.zeros(0), np.zeros(0), 0.0, np.zeros(0), 0.0,
+                         selection=sel)
+    sub = [fleet[i] for i in idx]
+    K = len(sub)
+
+    # ---- constants per selected vehicle ----------------------------------
+    dists = np.array([rsu_distance(cfg, v.x) for v in sub])
+    t_cp = np.array([gpu_model.train_time(v, batches) for v in sub])   # A
+    p_run = np.array([gpu_model.runtime_power(v) for v in sub])
+    e_cp = p_run * t_cp                                                # C (per =G)
+    n0 = channel.noise_watts(cfg)
+    b_prime = cfg.unit_channel_gain * dists ** (-cfg.path_loss_exp) / n0
+
+    # ---- Small computation scale: BCD over SUBP2/3/4 ----------------------
+    l = bw.equal_share(K, cfg.num_subcarriers)
+    phi = np.array([v.phi_max for v in sub])
+    b_gen = b_prev
+    history: List[float] = []
+    it = 0
+    for it in range(1, max_bcd + 1):
+        l_old, phi_old, b_old = l.copy(), phi.copy(), b_gen
+
+        # SUBP2: bandwidth given phi, b
+        rate_1sub = cfg.subcarrier_bw * np.log2(1.0 + b_prime * phi)
+        B = model_bits / rate_1sub                 # T_mu = B / l_n
+        D = phi * B                                # E_mu = D / l_n
+        res2 = bw.solve_bandwidth(t_cp, B, e_cp, D, cfg.num_subcarriers,
+                                  cfg.e_max)
+        l = res2.l
+
+        # SUBP3: power given l, b
+        res3 = pw.solve_power(model_bits, l * cfg.subcarrier_bw, b_prime,
+                              e_cp, cfg.e_max, cfg.phi_min,
+                              np.array([v.phi_max for v in sub]))
+        phi = res3.phi
+
+        # SUBP4: generation given l, phi (closed form, eq. 48)
+        t_mu = pw.t_of_phi(model_bits, l * cfg.subcarrier_bw, b_prime, phi)
+        t_bar = float(np.max(t_cp + t_mu))
+        b_gen = optimal_generation(min(t_bar, cfg.t_max), b_old, svc,
+                                   cfg.gen_batch)
+        history.append(t_bar)
+
+        if (np.max(np.abs(l - l_old)) < eps
+                and np.max(np.abs(phi - phi_old)) < eps
+                and abs(b_gen - b_old) < 1):
+            break
+
+    t_mu = pw.t_of_phi(model_bits, l * cfg.subcarrier_bw, b_prime, phi)
+    e_mu = phi * t_mu
+    t_bar = float(np.max(t_cp + t_mu))
+    t_rsu = inference_time(svc, b_gen) + rsu_train_time(
+        max(b_gen // cfg.gen_batch, 1))
+    return RoundPlan(alpha=alpha, selected=idx, l=l, phi=phi, b_gen=b_gen,
+                     t_cp=t_cp, t_mu=t_mu, t_bar=t_bar,
+                     e_total=e_cp + e_mu, t_rsu=t_rsu, bcd_iters=it,
+                     history=history, selection=sel)

@@ -1,0 +1,2 @@
+from repro.data.synthetic import make_image_dataset, make_token_dataset, DATASET_CLASSES
+from repro.data.partition import dirichlet_partition

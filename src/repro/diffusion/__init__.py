@@ -1,0 +1,2 @@
+from repro.diffusion.ddpm import (DDPM, ddpm_loss, ddpm_sample, make_ddpm,
+                                  q_sample)

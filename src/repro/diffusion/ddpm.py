@@ -1,0 +1,81 @@
+"""DDPM (paper Sec. III-B, eq. 1-2): forward noising, noise-prediction loss,
+and ancestral sampling, class-conditional.
+
+q(x_t | x_{t-1}) = N(sqrt(1-lambda_t) x_{t-1}, lambda_t I)          (eq. 1)
+L = E || eps - eps_theta(x_t, t) ||^2                               (eq. 2)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.diffusion.unet import init_unet, unet_apply
+
+
+@dataclass(frozen=True)
+class DDPM:
+    timesteps: int = 200
+    beta_min: float = 1e-4
+    beta_max: float = 0.02
+    num_classes: int = 10
+    base_width: int = 32
+
+    def betas(self):
+        return jnp.linspace(self.beta_min, self.beta_max, self.timesteps)
+
+    def alpha_bars(self):
+        return jnp.cumprod(1.0 - self.betas())
+
+
+def make_ddpm(key, ddpm: DDPM):
+    return init_unet(key, ddpm.num_classes, base=ddpm.base_width)
+
+
+def q_sample(ddpm: DDPM, x0, t, eps):
+    """Eq. (1) composed over t steps: x_t = sqrt(abar_t) x0 + sqrt(1-abar_t) eps."""
+    abar = ddpm.alpha_bars()[t][:, None, None, None]
+    return jnp.sqrt(abar) * x0 + jnp.sqrt(1.0 - abar) * eps
+
+
+def ddpm_loss(params, ddpm: DDPM, key, x0, y):
+    """Eq. (2)."""
+    kt, ke = jax.random.split(key)
+    B = x0.shape[0]
+    t = jax.random.randint(kt, (B,), 0, ddpm.timesteps)
+    eps = jax.random.normal(ke, x0.shape)
+    x_t = q_sample(ddpm, x0, t, eps)
+    eps_hat = unet_apply(params, x_t, t, y)
+    return jnp.mean(jnp.square(eps - eps_hat))
+
+
+@partial(jax.jit, static_argnums=(1,))
+def _sample_loop(params, ddpm: DDPM, key, y):
+    betas = ddpm.betas()
+    alphas = 1.0 - betas
+    abars = ddpm.alpha_bars()
+    B = y.shape[0]
+
+    def body(i, carry):
+        x, k = carry
+        t = ddpm.timesteps - 1 - i
+        tb = jnp.full((B,), t, jnp.int32)
+        eps_hat = unet_apply(params, x, tb, y)
+        coef = betas[t] / jnp.sqrt(1.0 - abars[t])
+        mean = (x - coef * eps_hat) / jnp.sqrt(alphas[t])
+        k, kn = jax.random.split(k)
+        noise = jax.random.normal(kn, x.shape)
+        x = mean + jnp.where(t > 0, jnp.sqrt(betas[t]), 0.0) * noise
+        return (x, k)
+
+    k0, kx = jax.random.split(key)
+    x = jax.random.normal(kx, (B, 32, 32, 3))
+    x, _ = jax.lax.fori_loop(0, ddpm.timesteps, body, (x, k0))
+    return jnp.clip(x, -1.0, 1.0)
+
+
+def ddpm_sample(params, ddpm: DDPM, key, labels):
+    """Ancestral sampling: labels [B] int -> images [B,32,32,3] in [-1,1]."""
+    return _sample_loop(params, ddpm, key, jnp.asarray(labels, jnp.int32))

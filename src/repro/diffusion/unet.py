@@ -1,0 +1,132 @@
+"""Class-conditional UNet noise predictor for 32x32 images (DDPM backbone,
+paper Sec. III-B / Sec. VI-A2). Pure functional JAX.
+
+Topology: 32 -> 16 -> 8 resolution, [c, 2c, 4c] channels, residual blocks
+with GroupNorm+SiLU, a self-attention block at 8x8, sinusoidal time
+embedding + learned class embedding injected per block (FiLM-style shift).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+
+def _conv_init(key, k, c_in, c_out, scale=None):
+    fan_in = k * k * c_in
+    scale = (2.0 / fan_in) ** 0.5 if scale is None else scale
+    return jax.random.normal(key, (k, k, c_in, c_out)) * scale
+
+
+def conv(w, x, stride=1):
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def _gn_init(c):
+    return {"scale": jnp.ones((c,)), "bias": jnp.zeros((c,))}
+
+
+def groupnorm(p, x, groups=8, eps=1e-5):
+    B, H, W, C = x.shape
+    g = min(groups, C)
+    while C % g:
+        g -= 1
+    xg = x.reshape(B, H, W, g, C // g)
+    mu = xg.mean((1, 2, 4), keepdims=True)
+    var = xg.var((1, 2, 4), keepdims=True)
+    xg = (xg - mu) * jax.lax.rsqrt(var + eps)
+    return xg.reshape(B, H, W, C) * p["scale"] + p["bias"]
+
+
+def time_embedding(t, dim):
+    """Sinusoidal embedding of integer timestep t: [B] -> [B, dim]."""
+    half = dim // 2
+    freqs = jnp.exp(-jnp.log(10000.0) * jnp.arange(half) / half)
+    ang = t[:, None].astype(jnp.float32) * freqs[None]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def _res_init(key, c_in, c_out, emb):
+    ks = jax.random.split(key, 4)
+    p = {"gn1": _gn_init(c_in), "conv1": _conv_init(ks[0], 3, c_in, c_out),
+         "emb": jax.random.normal(ks[1], (emb, c_out)) * (1.0 / emb) ** 0.5,
+         "gn2": _gn_init(c_out),
+         "conv2": _conv_init(ks[2], 3, c_out, c_out, scale=1e-3)}
+    if c_in != c_out:
+        p["proj"] = _conv_init(ks[3], 1, c_in, c_out)
+    return p
+
+
+def _res_apply(p, x, emb):
+    h = conv(p["conv1"], jax.nn.silu(groupnorm(p["gn1"], x)))
+    h = h + (emb @ p["emb"])[:, None, None, :]
+    h = conv(p["conv2"], jax.nn.silu(groupnorm(p["gn2"], h)))
+    if "proj" in p:
+        x = conv(p["proj"], x)
+    return x + h
+
+
+def _attn_init(key, c):
+    ks = jax.random.split(key, 4)
+    s = (1.0 / c) ** 0.5
+    return {"gn": _gn_init(c),
+            "wq": jax.random.normal(ks[0], (c, c)) * s,
+            "wk": jax.random.normal(ks[1], (c, c)) * s,
+            "wv": jax.random.normal(ks[2], (c, c)) * s,
+            "wo": jax.random.normal(ks[3], (c, c)) * 1e-3}
+
+
+def _attn_apply(p, x):
+    B, H, W, C = x.shape
+    h = groupnorm(p["gn"], x).reshape(B, H * W, C)
+    q, k, v = h @ p["wq"], h @ p["wk"], h @ p["wv"]
+    a = jax.nn.softmax(q @ k.transpose(0, 2, 1) * (C ** -0.5), axis=-1)
+    out = (a @ v) @ p["wo"]
+    return x + out.reshape(B, H, W, C)
+
+
+def init_unet(key, num_classes: int, base: int = 64, emb: int = 256
+              ) -> Dict[str, Any]:
+    c1, c2, c3 = base, base * 2, base * 4
+    ks = jax.random.split(key, 20)
+    return {
+        "cls_emb": jax.random.normal(ks[0], (num_classes, emb)) * 0.02,
+        "t_w1": jax.random.normal(ks[1], (emb, emb)) * (1.0 / emb) ** 0.5,
+        "t_w2": jax.random.normal(ks[2], (emb, emb)) * (1.0 / emb) ** 0.5,
+        "in": _conv_init(ks[3], 3, 3, c1),
+        "d1a": _res_init(ks[4], c1, c1, emb),
+        "down1": _conv_init(ks[5], 3, c1, c2),      # stride 2: 32->16
+        "d2a": _res_init(ks[6], c2, c2, emb),
+        "down2": _conv_init(ks[7], 3, c2, c3),      # stride 2: 16->8
+        "mid1": _res_init(ks[8], c3, c3, emb),
+        "mid_attn": _attn_init(ks[9], c3),
+        "mid2": _res_init(ks[10], c3, c3, emb),
+        "u2": _res_init(ks[11], c3 + c2, c2, emb),  # 16
+        "u1": _res_init(ks[12], c2 + c1, c1, emb),  # 32
+        "out_gn": _gn_init(c1),
+        "out": _conv_init(ks[13], 3, c1, 3, scale=1e-3),
+    }
+
+
+def unet_apply(p, x, t, y):
+    """x: [B,32,32,3]; t: [B] int; y: [B] int class. Returns eps_hat."""
+    emb = time_embedding(t, p["t_w1"].shape[0]) + p["cls_emb"][y]
+    emb = jax.nn.silu(emb @ p["t_w1"]) @ p["t_w2"]
+
+    h0 = conv(p["in"], x)                       # 32, c1
+    h1 = _res_apply(p["d1a"], h0, emb)          # 32, c1
+    h2 = conv(p["down1"], h1, stride=2)         # 16, c2
+    h2 = _res_apply(p["d2a"], h2, emb)          # 16, c2
+    h3 = conv(p["down2"], h2, stride=2)         # 8,  c3
+    h3 = _res_apply(p["mid1"], h3, emb)
+    h3 = _attn_apply(p["mid_attn"], h3)
+    h3 = _res_apply(p["mid2"], h3, emb)
+
+    u = jax.image.resize(h3, (h3.shape[0], 16, 16, h3.shape[-1]), "nearest")
+    u = _res_apply(p["u2"], jnp.concatenate([u, h2], -1), emb)   # 16, c2
+    u = jax.image.resize(u, (u.shape[0], 32, 32, u.shape[-1]), "nearest")
+    u = _res_apply(p["u1"], jnp.concatenate([u, h1], -1), emb)   # 32, c1
+    return conv(p["out"], jax.nn.silu(groupnorm(p["out_gn"], u)))

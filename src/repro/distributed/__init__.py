@@ -1,0 +1,3 @@
+from repro.distributed.sharding import (batch_shardings, cache_shardings,
+                                        params_shardings, shard_leaf)
+from repro.distributed.collectives import genfv_weighted_allreduce

@@ -1,0 +1,82 @@
+"""Logical activation-sharding constraints.
+
+GSPMD propagation alone can drop the batch sharding of intermediates (we
+observed attention scores replicated over the data axis — 16 GiB/device).
+Model code therefore annotates activations with *logical* axes ("batch",
+"model") via `aconstrain`; the launcher activates a mapping to physical mesh
+axes around lower()/compile(). Outside the context (CPU tests) every
+annotation is a no-op, and any dimension the mesh axis does not divide is
+left unsharded (never pad silently).
+"""
+from __future__ import annotations
+
+from contextlib import contextmanager
+from typing import Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_STATE = {"batch": None, "model": None, "sizes": {}}
+
+
+@contextmanager
+def activation_sharding(mesh, *, batch_axes: Optional[Tuple[str, ...]] = None,
+                        model_axis: str = "model"):
+    """Activate logical->physical axis mapping for traces inside the block."""
+    names = list(mesh.shape.keys())
+    if batch_axes is None:
+        batch_axes = tuple(n for n in names if n in ("pod", "data")) or None
+    old = dict(_STATE)
+    _STATE.update(batch=tuple(batch_axes) if batch_axes else None,
+                  model=model_axis if model_axis in names else None,
+                  sizes=dict(mesh.shape))
+    try:
+        yield
+    finally:
+        _STATE.clear()
+        _STATE.update(old)
+        _STATE.setdefault("sizes", {})
+
+
+def _size(ax) -> int:
+    sizes = _STATE["sizes"]
+    if isinstance(ax, tuple):
+        s = 1
+        for a in ax:
+            s *= sizes.get(a, 1)
+        return s
+    return sizes.get(ax, 1)
+
+
+def aconstrain(x, logical: Sequence[Optional[str]]):
+    """logical: per-dim 'batch' | 'model' | None. Applies
+    with_sharding_constraint where the axis divides the dim."""
+    if (_STATE["batch"] is None and _STATE["model"] is None) or x.ndim != len(logical):
+        return x
+    spec = []
+    for dim, l in enumerate(logical):
+        ax = _STATE["batch"] if l == "batch" else (
+            _STATE["model"] if l == "model" else None)
+        if ax is not None:
+            n = _size(ax)
+            if n > 1 and x.shape[dim] % n == 0 and x.shape[dim] >= n:
+                spec.append(ax)
+                continue
+        spec.append(None)
+    if all(s is None for s in spec):
+        return x
+    try:
+        return jax.lax.with_sharding_constraint(x, P(*spec))
+    except Exception:
+        return x
+
+
+def active() -> bool:
+    return _STATE["batch"] is not None or _STATE["model"] is not None
+
+
+def logical_size(name: str) -> int:
+    """Physical size of a logical axis in the active context (1 if inactive)."""
+    ax = _STATE["batch"] if name == "batch" else (
+        _STATE["model"] if name == "model" else None)
+    return _size(ax) if ax is not None else 1

@@ -1,0 +1,47 @@
+"""GenFV aggregation as a collective (DESIGN.md §4).
+
+The paper's eq. (4) — kappa1 * sum_n rho_n w_n + kappa2 * w_a — is a
+*weighted all-reduce*: each mesh cohort holds its locally-updated model and
+a scalar weight (rho_n * kappa1 for vehicle cohorts, kappa2 for the RSU's
+augmented cohort); the global model is psum(w * model) / psum-normalizer
+over the ('pod','data') axes. This maps the wireless aggregation 1:1 onto
+TPU collectives and is exercised by tests/test_distributed.py.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def genfv_weighted_allreduce(models, weights, mesh: Mesh, axes=("data",)):
+    """models: pytree stacked on axis 0 with one entry per mesh cohort
+    (leading dim == prod(axes sizes)); weights: [n_cohorts] (already
+    normalized: sum(weights) == 1, e.g. [k1*rho_1, ..., k1*rho_N, k2]).
+
+    Returns the aggregated model, computed with a weighted psum under
+    shard_map — the distributed form of eq. (4).
+    """
+    n = jax.tree.leaves(models)[0].shape[0]
+    sizes = [mesh.shape[a] for a in axes]
+    assert n == int(np.prod(sizes)), (n, sizes)
+
+    in_specs = (jax.tree.map(lambda _: P(axes), models),
+                P(axes))
+    out_specs = jax.tree.map(lambda _: P(), models)
+
+    def agg(local_model, local_w):
+        # local_model leaves: [1, ...]; local_w: [1]
+        scaled = jax.tree.map(
+            lambda m: (m[0].astype(jnp.float32) * local_w[0]), local_model)
+        summed = jax.tree.map(
+            lambda m: jax.lax.psum(m, axes), scaled)
+        return summed
+
+    fn = jax.shard_map(agg, mesh=mesh, in_specs=in_specs,
+                       out_specs=out_specs)
+    return fn(models, weights)
+

@@ -1,0 +1,163 @@
+"""Sharding rules for the production mesh (DESIGN.md §7).
+
+Strategy: FSDP+TP hybrid, *divisibility-aware* — a dimension is only sharded
+if the mesh axis divides it exactly (no silent padding):
+
+* params: the largest dim divisible by |model| is tensor-sharded over
+  'model' (heads / d_ff / experts / vocab end up here naturally); a second
+  dim divisible by |fsdp| = |pod|x|data| is FSDP-sharded. Stacked-layer
+  leading dims (scan groups) are never sharded.
+* batch: global batch over ('pod','data'); decode long_500k (batch=1)
+  replicates the token and shards the *cache* instead.
+* caches: batch over ('pod','data') when divisible, then kv-heads over
+  'model', falling back to head_dim, falling back to replication.
+
+All rules return NamedSharding pytrees usable as in_shardings/out_shardings.
+"""
+from __future__ import annotations
+
+from typing import Any, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def _axis_size(mesh: Mesh, names) -> int:
+    if isinstance(names, str):
+        names = (names,)
+    s = 1
+    for n in names:
+        s *= mesh.shape[n]
+    return s
+
+
+def shard_leaf(shape: Sequence[int], mesh: Mesh, *, model_axis="model",
+               fsdp_axes=None, skip_leading: bool = False) -> P:
+    """Pick a PartitionSpec for one parameter leaf."""
+    fsdp_axes = fsdp_axes if fsdp_axes is not None else _default_fsdp(mesh)
+    ndim = len(shape)
+    spec = [None] * ndim
+    start = 1 if (skip_leading and ndim >= 3) else 0
+    dims = sorted(range(start, ndim), key=lambda i: -shape[i])
+
+    m = _axis_size(mesh, model_axis)
+    used = None
+    for i in dims:
+        if shape[i] % m == 0 and shape[i] >= m:
+            spec[i] = model_axis
+            used = i
+            break
+    f = _axis_size(mesh, fsdp_axes)
+    for i in dims:
+        if i != used and shape[i] % f == 0 and shape[i] >= f:
+            spec[i] = fsdp_axes
+            break
+    return P(*spec)
+
+
+def _default_fsdp(mesh: Mesh):
+    names = list(mesh.shape.keys())
+    fsdp = tuple(n for n in names if n in ("pod", "data"))
+    return fsdp if fsdp else (names[0],)
+
+
+def _batch_axes(mesh: Mesh):
+    return _default_fsdp(mesh)
+
+
+def params_shardings(params_shapes: Any, mesh: Mesh) -> Any:
+    """params_shapes: pytree of ShapeDtypeStruct (jax.eval_shape of init).
+
+    Expert weights (path contains 'moe', shape [..., E, d_in, d_out]) are
+    EXPERT-PARALLEL: the expert dim is sharded over 'model' (the dispatch
+    buffer is resharded to match — models/moe.py), with FSDP on d_in/d_out.
+    Everything else follows the generic largest-divisible-dim rule."""
+    m = mesh.shape.get("model", 1)
+    fsdp = _default_fsdp(mesh)
+    f = _axis_size(mesh, fsdp)
+
+    def rule(path, leaf):
+        keys = [getattr(p, "key", None) for p in path]
+        is_expert = ("moe" in keys and len(leaf.shape) >= 3
+                     and "router" not in keys)
+        if is_expert:
+            edim = len(leaf.shape) - 3
+            spec = [None] * len(leaf.shape)
+            if leaf.shape[edim] % m == 0 and leaf.shape[edim] >= m:
+                spec[edim] = "model"
+                # FSDP the largest remaining matmul dim
+                for i in sorted(range(edim + 1, len(leaf.shape)),
+                                key=lambda i_: -leaf.shape[i_]):
+                    if leaf.shape[i] % f == 0 and leaf.shape[i] >= f:
+                        spec[i] = fsdp
+                        break
+                return NamedSharding(mesh, P(*spec))
+        skip = len(leaf.shape) >= 3
+        return NamedSharding(mesh, shard_leaf(leaf.shape, mesh,
+                                              skip_leading=skip))
+
+    return jax.tree_util.tree_map_with_path(rule, params_shapes)
+
+
+def batch_shardings(batch_shapes: Any, mesh: Mesh) -> Any:
+    """Activations/inputs: dim 0 (batch) over ('pod','data') when divisible."""
+    baxes = _batch_axes(mesh)
+    b = _axis_size(mesh, baxes)
+
+    def rule(leaf):
+        spec = [None] * len(leaf.shape)
+        if len(leaf.shape) >= 1 and leaf.shape[0] % b == 0 and leaf.shape[0] >= b:
+            spec[0] = baxes
+        return NamedSharding(mesh, P(*spec))
+    return jax.tree.map(rule, batch_shapes)
+
+
+def cache_shardings(cache_shapes: Any, mesh: Mesh) -> Any:
+    """KV caches [B, cap, nkv, hd], positions [B, cap], recurrent states
+    [B, w] / [B, h, hd, hd]: batch over ('pod','data'); one more dim over
+    'model' when divisible (head_dim > kv-heads > width).
+
+    Structure-aware: leaves under "groups" are stacked over the scan-group
+    axis (leading dim G) which is never sharded (scan slices it)."""
+    baxes = _batch_axes(mesh)
+    b = _axis_size(mesh, baxes)
+    m = mesh.shape.get("model", 1)
+
+    def rule(offset):
+        def f(leaf):
+            shape = leaf.shape
+            spec = [None] * len(shape)
+            dims = list(range(offset, len(shape)))
+            if dims and shape[dims[0]] % b == 0 and shape[dims[0]] >= b:
+                spec[dims[0]] = baxes
+            for i in reversed(dims[1:]):
+                if i == dims[0] + 1 and len(dims) == 4:
+                    continue   # never shard the ring-buffer seq dim of kv caches
+                if shape[i] % m == 0 and shape[i] >= m:
+                    spec[i] = "model"
+                    break
+            return NamedSharding(mesh, P(*spec))
+        return f
+
+    if isinstance(cache_shapes, dict) and ("groups" in cache_shapes
+                                           or "rem" in cache_shapes):
+        out = {}
+        if "groups" in cache_shapes:
+            out["groups"] = jax.tree.map(rule(1), cache_shapes["groups"])
+        if "rem" in cache_shapes:
+            out["rem"] = jax.tree.map(rule(0), cache_shapes["rem"])
+        return out
+    return jax.tree.map(rule(0), cache_shapes)
+
+
+def replicated(tree: Any, mesh: Mesh) -> Any:
+    return jax.tree.map(lambda _: NamedSharding(mesh, P()), tree)
+
+
+def describe(shardings: Any, max_items: int = 20) -> str:
+    """Debug helper: path -> spec lines."""
+    lines = []
+    for path, s in jax.tree_util.tree_flatten_with_path(shardings)[0][:max_items]:
+        lines.append(f"{jax.tree_util.keystr(path)}: {s.spec}")
+    return "\n".join(lines)

@@ -1,0 +1,1 @@
+from repro.fl.rounds import GenFVRunner, RunConfig

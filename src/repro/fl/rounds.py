@@ -1,0 +1,202 @@
+"""GenFV round orchestration (paper Fig. 2 workflow + Algorithm 3), plus the
+baseline schemes of Sec. VI-B: FedAvg, No-EMD, OCEAN-a, MADCA-FL, FL-only,
+AIGC-only.
+
+Each round:
+  1. label sharing: vehicles report label histograms -> EMD_n
+  2. SUBP1 selection (strategy-dependent)
+  3. SUBP2-4 resource allocation (two-scale BCD) -> RoundPlan + delay ledger
+  4. selected vehicles run h local SGD steps
+  5. RSU generates b images (SUBP4 schedule) and trains the augmented model
+  6. EMD-weighted aggregation (eq. 4)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import GenFVConfig
+from repro.configs.genfv_cifar import CNNConfig, cnn_config
+from repro.core import mobility, plan_round
+from repro.core.generation import label_schedule
+from repro.core.selection import (select, select_madca, select_no_emd,
+                                  select_ocean, select_random)
+from repro.data.partition import dirichlet_partition
+from repro.data.synthetic import DATASET_CLASSES, make_image_dataset
+from repro.fl.client import client_update
+from repro.fl.generator import OracleGenerator
+from repro.fl.server import GenFVServer
+from repro.models.cnn import cnn_forward, init_cnn
+
+STRATEGIES = ("genfv", "fedavg", "no_emd", "madca", "ocean",
+              "fl_only", "aigc_only", "fedprox")
+
+
+@dataclass
+class RunConfig:
+    dataset: str = "cifar10"
+    alpha: float = 0.1
+    rounds: int = 20
+    strategy: str = "genfv"
+    train_size: int = 4000
+    test_size: int = 512
+    width_mult: float = 0.25
+    seed: int = 0
+    model_bits: float | None = None      # default: 32 bits/param of the CNN
+
+
+@dataclass
+class RoundLog:
+    round: int
+    selected: int
+    t_bar: float
+    b_gen: int
+    kappa2: float
+    emd_bar: float
+    loss: float
+    accuracy: float
+
+
+@dataclass
+class RunResult:
+    logs: List[RoundLog] = field(default_factory=list)
+
+    def curve(self, key: str) -> np.ndarray:
+        return np.array([getattr(l, key) for l in self.logs])
+
+
+class GenFVRunner:
+    def __init__(self, run: RunConfig, fl_cfg: GenFVConfig | None = None,
+                 generator=None):
+        self.run = run
+        self.cfg = fl_cfg or GenFVConfig(dirichlet_alpha=run.alpha)
+        self.rng = np.random.default_rng(run.seed)
+        self.cnn_cfg: CNNConfig = cnn_config(run.dataset, run.width_mult)
+        classes = DATASET_CLASSES[run.dataset]
+
+        imgs, labels = make_image_dataset(run.dataset, run.train_size,
+                                          seed=run.seed)
+        self.test_imgs, self.test_labels = make_image_dataset(
+            run.dataset, run.test_size, seed=run.seed + 999)
+        parts = dirichlet_partition(labels, self.cfg.num_vehicles, run.alpha,
+                                    self.rng)
+        self.client_data = [(imgs[ix], labels[ix]) for ix in parts]
+        self.hists = [np.bincount(labels[ix], minlength=classes) /
+                      max(len(ix), 1) for ix in parts]
+        self.sizes = [len(ix) for ix in parts]
+
+        key = jax.random.PRNGKey(run.seed)
+        params = init_cnn(key, self.cnn_cfg)
+        n_params = sum(x.size for x in jax.tree.leaves(params))
+        self.model_bits = run.model_bits or n_params * 32.0
+        gen = generator or OracleGenerator(run.dataset)
+        self.server = GenFVServer(self.cnn_cfg, params, gen, self.rng)
+        self.classes = classes
+        self.b_prev = 0
+        cfg_cnn = self.cnn_cfg
+        self._eval = jax.jit(
+            lambda p, x, y: jnp.mean(
+                (jnp.argmax(cnn_forward(p, cfg_cnn, x), -1) == y)
+                .astype(jnp.float32)))
+
+    # ------------------------------------------------------------------
+    def _alpha(self, fleet, round_idx: int) -> np.ndarray:
+        s = self.run.strategy
+        batches = self.cfg.local_steps
+        if s in ("genfv", "aigc_only", "fl_only"):
+            return select(self.cfg, fleet, self.model_bits, batches).alpha
+        if s == "fedprox":
+            return select_random(self.rng, fleet, k=max(
+                1, int(0.3 * len(fleet))))
+        if s == "fedavg":
+            return select_random(self.rng, fleet, k=max(
+                1, int(0.3 * len(fleet))))
+        if s == "no_emd":
+            return select_no_emd(self.cfg, fleet, self.model_bits, batches)
+        if s == "madca":
+            return select_madca(self.cfg, fleet, self.model_bits, batches)
+        if s == "ocean":
+            return select_ocean(self.cfg, fleet, self.model_bits, batches,
+                                round_idx, self.run.rounds)
+        raise ValueError(s)
+
+    # ------------------------------------------------------------------
+    def run_round(self, t: int) -> RoundLog:
+        run = self.run
+        cfg = self.cfg
+        # fleet of the round: vehicles map onto data partitions
+        order = self.rng.permutation(len(self.client_data))
+        hists = [self.hists[i] for i in order]
+        sizes = [self.sizes[i] for i in order]
+        fleet = mobility.sample_fleet(self.rng, cfg, hists, sizes)
+
+        alpha = self._alpha(fleet, t)
+        plan = plan_round(cfg, fleet, self.model_bits, cfg.local_steps,
+                          b_prev=self.b_prev, alpha_override=alpha)
+        self.b_prev = plan.b_gen
+
+        use_aigc = run.strategy in ("genfv", "aigc_only")
+        use_fl = run.strategy != "aigc_only"
+        prox_mu = 0.1 if run.strategy == "fedprox" else 0.0
+
+        models, msizes, memds = [], [], []
+        loss = 0.0
+        if use_fl:
+            for j in plan.selected:
+                v = fleet[j]
+                data_idx = order[j]
+                di, dl = self.client_data[data_idx]
+                if len(dl) < 2:
+                    continue
+                # moderate client lr: high-lr few-class local models drift
+                # into incompatible basins and weight-average destructively
+                m, l = client_update(self.server.params, self.cnn_cfg, di, dl,
+                                     self.rng, cfg.local_steps,
+                                     cfg.batch_size, lr=5e-2,
+                                     prox_mu=prox_mu)
+                models.append(m)
+                msizes.append(v.data_size)
+                memds.append(v.emd)
+                loss += l
+            loss = loss / max(len(models), 1)
+
+        aug = None
+        if use_aigc:
+            counts = label_schedule(plan.b_gen if use_fl else cfg.gen_batch * 4,
+                                    self.classes)
+            self.server.generate(counts)
+            aug, aug_loss = self.server.train_augmented(
+                cfg.local_steps * cfg.rsu_steps_factor, cfg.batch_size,
+                lr=5e-2)
+            if not use_fl:
+                loss = aug_loss
+
+        if run.strategy == "aigc_only":
+            self.server.params = aug
+            k2 = 1.0
+            emd_bar = 0.0
+        else:
+            _, (k1, k2) = self.server.aggregate(models, msizes, memds,
+                                                aug if use_aigc else None)
+            emd_bar = float(np.mean(memds)) if memds else 0.0
+
+        acc = float(self._eval(self.server.params, self.test_imgs,
+                               self.test_labels))
+        return RoundLog(t, len(models), plan.t_bar, plan.b_gen, k2,
+                        emd_bar, float(loss), acc)
+
+    # ------------------------------------------------------------------
+    def train(self, verbose: bool = False) -> RunResult:
+        res = RunResult()
+        for t in range(self.run.rounds):
+            log = self.run_round(t)
+            res.logs.append(log)
+            if verbose:
+                print(f"[{self.run.strategy}] round {t:3d} sel={log.selected:2d} "
+                      f"t_bar={log.t_bar:5.2f}s b={log.b_gen:4d} "
+                      f"k2={log.kappa2:.3f} loss={log.loss:.3f} acc={log.accuracy:.3f}")
+        return res

@@ -1,0 +1,57 @@
+"""RSU-side logic: augmented-model training on AIGC data and the EMD-weighted
+aggregation (paper Sec. III-A step 5, eq. 4)."""
+from __future__ import annotations
+
+from typing import List, Sequence
+
+import numpy as np
+
+from repro.core.emd import aggregate, data_weights, kappas, mean_emd
+from repro.fl.client import client_update
+
+
+class GenFVServer:
+    def __init__(self, cfg_model, global_params, generator, rng):
+        self.cfg_model = cfg_model
+        self.params = global_params
+        self.generator = generator
+        self.rng = rng
+        self.pool_imgs: np.ndarray | None = None   # accumulated AIGC data
+        self.pool_labels: np.ndarray | None = None
+
+    # ---- model augmentation (step 5) -------------------------------------
+    def generate(self, label_counts: np.ndarray):
+        labels = np.repeat(np.arange(len(label_counts)), label_counts)
+        if len(labels) == 0:
+            return 0
+        imgs = self.generator.generate(labels, self.rng)
+        if self.pool_imgs is None:
+            self.pool_imgs, self.pool_labels = imgs, labels.astype(np.int32)
+        else:
+            self.pool_imgs = np.concatenate([self.pool_imgs, imgs])
+            self.pool_labels = np.concatenate(
+                [self.pool_labels, labels.astype(np.int32)])
+        return len(labels)
+
+    def train_augmented(self, h: int, batch_size: int, lr: float):
+        """omega_a update: h local steps on the generated pool (Sec. III-C1)."""
+        if self.pool_imgs is None or len(self.pool_labels) < 2:
+            return self.params, 0.0
+        return client_update(self.params, self.cfg_model, self.pool_imgs,
+                             self.pool_labels, self.rng, h, batch_size, lr)
+
+    # ---- aggregation (eq. 4) ----------------------------------------------
+    def aggregate(self, vehicle_models: List, sizes: Sequence[int],
+                  emds: Sequence[float], aug_model=None):
+        if not vehicle_models:
+            if aug_model is not None:
+                self.params = aug_model
+            return self.params, (1.0, 0.0)
+        rhos = data_weights(sizes)
+        emd_bar = mean_emd(emds)
+        if aug_model is None:
+            # FL-only: plain weighted FedAvg (kappa2 = 0)
+            aug_model = vehicle_models[0]
+            emd_bar = 0.0
+        self.params = aggregate(vehicle_models, rhos, aug_model, emd_bar)
+        return self.params, kappas(emd_bar)

@@ -1,0 +1,145 @@
+"""Flash attention Pallas TPU kernel (target: v5e MXU; validated with
+interpret=True on CPU).
+
+Canonical TPU structure: 4D grid (batch, q_head, q_block, kv_block) with the
+kv dimension sequential ("arbitrary") so fp32 accumulators live in VMEM
+scratch across kv steps; q/k/v blocks are VMEM tiles selected by BlockSpec
+index maps (MXU-aligned: block_q x head_dim and block_k x head_dim with
+head_dim a multiple of 64/128 on all assigned archs).
+
+Features needed by the assigned architectures: GQA (kv head = q head // g,
+folded into the k/v index_map), causal + sliding-window masking, logit
+soft-capping (gemma2/grok), and position-based masking (-1 = empty cache
+slot; ring-buffer decode caches come in un-rotated).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def _kernel(qp_ref, kp_ref, q_ref, k_ref, v_ref,      # inputs
+            o_ref,                                     # output
+            acc_ref, m_ref, l_ref,                     # VMEM scratch
+            *, causal: bool, window: Optional[int],
+            softcap: Optional[float], n_kv: int, block_q: int, block_k: int):
+    kv_idx = pl.program_id(3)
+
+    @pl.when(kv_idx == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, ...].astype(jnp.float32)              # [bq, hd]
+    k = k_ref[0, ...].astype(jnp.float32)              # [bk, hd]
+    v = v_ref[0, ...].astype(jnp.float32)
+    qp = qp_ref[...]                                   # [bq] int32
+    kp = kp_ref[...]                                   # [bk] int32
+
+    hd = q.shape[-1]
+    s = jax.lax.dot_general(q * (hd ** -0.5), k,
+                            (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # [bq, bk]
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    valid = (kp >= 0)[None, :]
+    if causal:
+        rel = qp[:, None] - kp[None, :]
+        valid &= rel >= 0
+        if window is not None:
+            valid &= rel < window
+    s = jnp.where(valid, s, NEG)
+
+    m_prev = m_ref[...]
+    l_prev = l_ref[...]
+    m_cur = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    alpha = jnp.exp(m_prev - m_cur)
+    p = jnp.exp(s - m_cur[:, None])
+    l_cur = l_prev * alpha + jnp.sum(p, axis=-1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_cur
+    l_ref[...] = l_cur
+
+    @pl.when(kv_idx == n_kv - 1)
+    def _out():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, ...] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, q_pos, kv_pos, *, causal: bool = True,
+                    window: Optional[int] = None,
+                    softcap: Optional[float] = None,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: Optional[bool] = None):
+    """q: [B,Sq,nq,hd]; k,v: [B,Skv,nkv,hd]; q_pos: [B,Sq]; kv_pos: [B,Skv].
+
+    Returns [B,Sq,nq,hd] in q.dtype.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    B, Sq, nq, hd = q.shape
+    Skv, nkv = k.shape[1], k.shape[2]
+    g = nq // nkv
+
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Skv)
+    pad_q = (-Sq) % block_q
+    pad_k = (-Skv) % block_k
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+        q_pos = jnp.pad(q_pos, ((0, 0), (0, pad_q)),
+                        constant_values=-(2 ** 30))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        kv_pos = jnp.pad(kv_pos, ((0, 0), (0, pad_k)), constant_values=-1)
+    Sqp, Skvp = Sq + pad_q, Skv + pad_k
+    n_q, n_kv = Sqp // block_q, Skvp // block_k
+
+    # layout: [B, heads, S, hd] so blocks are (1, 1, block, hd) VMEM tiles
+    qT = q.transpose(0, 2, 1, 3)
+    kT = k.transpose(0, 2, 1, 3)
+    vT = v.transpose(0, 2, 1, 3)
+
+    grid = (B, nq, n_q, n_kv)
+    kernel = functools.partial(_kernel, causal=causal, window=window,
+                               softcap=softcap, n_kv=n_kv,
+                               block_q=block_q, block_k=block_k)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, block_q), lambda b, h, i, j: (b, i)),      # q_pos
+            pl.BlockSpec((None, block_k), lambda b, h, i, j: (b, j)),      # kv_pos
+            pl.BlockSpec((None, 1, block_q, hd),
+                         lambda b, h, i, j: (b, h, i, 0)),                 # q
+            pl.BlockSpec((None, 1, block_k, hd),
+                         lambda b, h, i, j: (b, h // g, j, 0)),            # k
+            pl.BlockSpec((None, 1, block_k, hd),
+                         lambda b, h, i, j: (b, h // g, j, 0)),            # v
+        ],
+        out_specs=pl.BlockSpec((None, 1, block_q, hd),
+                               lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, nq, Sqp, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, hd), jnp.float32),    # acc
+            pltpu.VMEM((block_q,), jnp.float32),       # m
+            pltpu.VMEM((block_q,), jnp.float32),       # l
+        ],
+        interpret=interpret,
+        compiler_params=None if interpret else pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")),
+    )(q_pos, kv_pos, qT, kT, vT)
+
+    out = out.transpose(0, 2, 1, 3)
+    return out[:, :Sq]

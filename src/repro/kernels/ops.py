@@ -1,0 +1,29 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+`impl="pallas"` paths in models/attention.py and models/rglru.py call these;
+on CPU they run in interpret mode (kernel body executed in Python — the
+TPU lowering is exercised by .lower() in the dry-run)."""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.rglru_scan import rglru_scan as _rglru
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "softcap",
+                                   "block_q", "block_k"))
+def flash_attention(q, k, v, q_pos, kv_pos, *, causal: bool = True,
+                    window: Optional[int] = None,
+                    softcap: Optional[float] = None,
+                    block_q: int = 128, block_k: int = 128):
+    return _flash(q, k, v, q_pos, kv_pos, causal=causal, window=window,
+                  softcap=softcap, block_q=block_q, block_k=block_k)
+
+
+@partial(jax.jit, static_argnames=("block_t", "block_w"))
+def rglru_scan(log_a, b, *, block_t: int = 256, block_w: int = 512):
+    return _rglru(log_a, b, block_t=block_t, block_w=block_w)

@@ -1,0 +1,50 @@
+"""Pure-jnp oracles for the Pallas kernels (naive, O(Sq x Skv) — used only
+at test shapes)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG = -1e30
+
+
+def flash_attention_ref(q, k, v, q_pos, kv_pos, *, causal: bool = True,
+                        window: Optional[int] = None,
+                        softcap: Optional[float] = None):
+    """q: [B,Sq,nq,hd]; k,v: [B,Skv,nkv,hd]; positions int32 (-1 = empty).
+
+    Returns [B,Sq,nq,hd] in q.dtype. fp32 softmax."""
+    B, Sq, nq, hd = q.shape
+    nkv = k.shape[2]
+    g = nq // nkv
+    qg = q.reshape(B, Sq, nkv, g, hd).astype(jnp.float32) * (hd ** -0.5)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k.astype(jnp.float32))
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    valid = kv_pos[:, None, None, None, :] >= 0
+    if causal:
+        rel = q_pos[:, None, None, :, None] - kv_pos[:, None, None, None, :]
+        valid &= rel >= 0
+        if window is not None:
+            valid &= rel < window
+    s = jnp.where(valid, s, NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    # rows with no valid kv produce uniform p over masked lanes; zero them
+    any_valid = jnp.any(valid, axis=-1, keepdims=True)
+    p = jnp.where(any_valid, p, 0.0)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return out.reshape(B, Sq, nq, hd).astype(q.dtype)
+
+
+def rglru_scan_ref(log_a, b):
+    """h_t = exp(log_a_t) h_{t-1} + b_t along axis 1. [B,S,W] fp32."""
+    def step(h, xs):
+        la, bb = xs
+        h = jnp.exp(la) * h + bb
+        return h, h
+
+    _, hs = jax.lax.scan(step, jnp.zeros_like(b[:, 0]),
+                         (log_a.transpose(1, 0, 2), b.transpose(1, 0, 2)))
+    return hs.transpose(1, 0, 2)

@@ -1,0 +1,304 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512").strip()
+
+"""Multi-pod dry-run (deliverable e): lower + compile every
+(architecture x input shape) on the production meshes and extract the
+roofline terms from the compiled artifact.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen1.5-0.5b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--out benchmarks/artifacts]
+
+The XLA_FLAGS line above MUST run before any other import (jax locks the
+device count on first init); smoke tests and benches import repro.* without
+this module and keep seeing 1 device.
+"""
+import argparse      # noqa: E402
+import json          # noqa: E402
+import re            # noqa: E402
+import time          # noqa: E402
+
+import jax           # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs import INPUT_SHAPES, get_config, list_archs      # noqa: E402
+from repro.configs.base import V5E                                   # noqa: E402
+from repro.distributed.autoshard import activation_sharding          # noqa: E402
+from repro.distributed.sharding import (batch_shardings,             # noqa: E402
+                                        cache_shardings,
+                                        params_shardings, replicated)
+from repro.launch import specs as S                                  # noqa: E402
+from repro.launch.mesh import make_production_mesh                   # noqa: E402
+from repro.models import api                                         # noqa: E402
+from repro.optim import adamw, constant_schedule                     # noqa: E402
+
+COLLECTIVE_RE = re.compile(
+    r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+)
+SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+DTYPE_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "pred": 1,
+               "s8": 1, "u8": 1, "f64": 8, "s64": 8, "u64": 8, "c64": 8}
+
+
+_MOE_MODE_FOR_DRYRUN = {"mode": "dense"}
+
+
+def build_step(cfg, shape, optimizer, long_window=None):
+    if shape.kind == "train":
+        return api.make_train_step(cfg, optimizer, remat=True)
+    if shape.kind == "prefill":
+        return api.make_prefill_step(cfg, long_window=long_window)
+    return api.make_decode_step(cfg, long_window=long_window)
+
+
+def build_shardings(cfg, shape, mesh, args_specs, kind):
+    p_sh = params_shardings(args_specs[0], mesh)
+    if kind == "train":
+        o_sh = params_shardings(args_specs[1], mesh)
+        b_sh = batch_shardings(args_specs[2], mesh)
+        return (p_sh, o_sh, b_sh), (p_sh, o_sh, replicated({"m": 0}, mesh)["m"])
+    if kind == "prefill":
+        c_sh = cache_shardings(args_specs[1], mesh)
+        b_sh = batch_shardings(args_specs[2], mesh)
+        out_logits = batch_shardings(jax.ShapeDtypeStruct(
+            (shape.global_batch, cfg.vocab_size), jnp.float32), mesh)
+        return (p_sh, c_sh, b_sh), (out_logits, c_sh)
+    c_sh = cache_shardings(args_specs[1], mesh)
+    t_sh = batch_shardings(args_specs[2], mesh)
+    pos_sh = batch_shardings(args_specs[3], mesh)
+    out_logits = batch_shardings(jax.ShapeDtypeStruct(
+        (shape.global_batch, cfg.vocab_size), jnp.float32), mesh)
+    return (p_sh, c_sh, t_sh, pos_sh), (out_logits, c_sh)
+
+
+# ---------------------------------------------------------------------------
+# Collective-byte accounting from optimized HLO
+# ---------------------------------------------------------------------------
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in SHAPE_RE.findall(text):
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str, loop_scale: int = 1):
+    """Sum output-shape bytes of every collective op; ops inside non-entry
+    computations (scan bodies) are scaled by `loop_scale` (the layer-group
+    trip count — DESIGN.md §8)."""
+    per_kind = {}
+    total = 0.0
+    current_comp_is_entry = False
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        if ls.startswith("ENTRY "):
+            current_comp_is_entry = True
+            continue
+        if ls.endswith("{") and ("=" not in ls.split("{")[0]) and not ls.startswith("ENTRY"):
+            if re.match(r"^%?[\w\.\-]+ ", ls) or ls.split("{")[0].strip().endswith(")"):
+                current_comp_is_entry = False
+        m = COLLECTIVE_RE.search(ls)
+        if m and "=" in ls:
+            kind = m.group(1)
+            # result shape(s) sit between '=' and the op name:
+            #   %x = bf16[16,512]{...} all-reduce(...)
+            rhs = ls.split("=", 1)[1]
+            head = rhs.split(m.group(1))[0]
+            nbytes = _shape_bytes(head)
+            scale = 1 if current_comp_is_entry else loop_scale
+            per_kind[kind] = per_kind.get(kind, 0.0) + nbytes * scale
+            total += nbytes * scale
+    return total, per_kind
+
+
+from repro.launch.analysis import loop_trip_count, model_flops  # noqa: E402
+
+
+# ---------------------------------------------------------------------------
+def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool = False,
+               verbose: bool = True, dtype=jnp.bfloat16,
+               step_override=None, tag: str = "baseline",
+               moe_mode: str = "dense", cfg_overrides: dict | None = None):
+    import dataclasses
+    from repro.models.transformer import set_moe_mode
+    set_moe_mode(moe_mode)
+    _MOE_MODE_FOR_DRYRUN["mode"] = moe_mode
+    cfg = get_config(arch)
+    if cfg_overrides:
+        cfg = dataclasses.replace(cfg, **cfg_overrides)
+    shape = INPUT_SHAPES[shape_name]
+    ok, note = S.runnable(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "skipped": True,
+                "note": note,
+                "mesh": {"pod": 2, "data": 16, "model": 16} if multi_pod
+                else {"data": 16, "model": 16}}
+
+    long_window = None
+    if shape_name == "long_500k" and cfg.sliding_window and "local" not in cfg.pattern:
+        pass
+    if shape_name == "long_500k" and cfg.name.startswith("gemma2"):
+        long_window = cfg.sliding_window
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.size
+    optimizer = adamw(constant_schedule(1e-4))
+    args_specs, kind = S.input_specs(cfg, shape, optimizer, dtype=dtype)
+    step = (step_override or build_step)(cfg, shape, optimizer, long_window)
+    in_sh, out_sh = build_shardings(cfg, shape, mesh, args_specs, kind)
+
+    donate = tuple(range(len(args_specs)))[:2] if kind == "train" else (1,)
+    t0 = time.time()
+    with mesh, activation_sharding(mesh):
+        jitted = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh,
+                         donate_argnums=donate)
+        lowered = jitted.lower(*args_specs)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    mem = {}
+    try:
+        ma = compiled.memory_analysis()
+        if ma is not None:
+            for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "generated_code_size_in_bytes",
+                      "alias_size_in_bytes"):
+                v = getattr(ma, k, None)
+                if v is not None:
+                    mem[k] = int(v)
+    except Exception as e:            # backend may not implement it on CPU
+        mem["error"] = str(e)
+
+    cost = {}
+    try:
+        ca = compiled.cost_analysis()
+        ca = ca[0] if isinstance(ca, (list, tuple)) else ca
+        for k in ("flops", "bytes accessed", "transcendentals"):
+            if k in ca:
+                cost[k] = float(ca[k])
+    except Exception as e:
+        cost["error"] = str(e)
+
+    trip = loop_trip_count(cfg)
+    hlo = compiled.as_text()
+    cbytes, per_kind = collective_bytes(hlo, loop_scale=trip)
+
+    # cost_analysis counts scan bodies once -> record raw numbers as a
+    # cross-check; the roofline terms come from the analytic executed model
+    # (launch/analysis.py, DESIGN.md §8).
+    raw_flops = cost.get("flops", 0.0)
+    hlo_flops_global = raw_flops * n_chips * trip
+    hlo_bytes_global = cost.get("bytes accessed", 0.0) * n_chips * trip
+
+    from repro.launch.analysis import executed_bytes, executed_flops
+    moe_mode = _MOE_MODE_FOR_DRYRUN["mode"]
+    ex_f = executed_flops(cfg, shape, moe_mode=moe_mode,
+                          long_window=long_window)
+    ex_b = executed_bytes(cfg, shape, moe_mode=moe_mode,
+                          long_window=long_window)
+
+    mf = model_flops(cfg, shape)
+    compute_term = ex_f["total"] / (n_chips * V5E.peak_flops)
+    memory_term = ex_b["total"] / (n_chips * V5E.hbm_bw)
+    collective_term = cbytes / (n_chips * V5E.ici_bw)
+    dominant = max((("compute", compute_term), ("memory", memory_term),
+                    ("collective", collective_term)), key=lambda kv: kv[1])[0]
+
+    rec = {
+        "arch": arch, "shape": shape_name, "kind": kind, "tag": tag,
+        "mesh": dict(mesh.shape), "chips": n_chips,
+        "dtype": str(dtype.__name__ if hasattr(dtype, "__name__") else dtype),
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "memory": mem, "cost_per_device_raw": cost,
+        "loop_trip_count": trip,
+        "hlo_flops_global_crosscheck": hlo_flops_global,
+        "hlo_bytes_global_crosscheck": hlo_bytes_global,
+        "executed_flops_global": ex_f["total"],
+        "executed_flops_breakdown": ex_f["breakdown"],
+        "executed_bytes_global": ex_b["total"],
+        "executed_bytes_breakdown": {k: v for k, v in ex_b.items()
+                                     if k != "total"},
+        "collective_bytes_global": cbytes,
+        "collective_by_kind": per_kind,
+        "model_flops": mf,
+        "useful_flops_ratio": mf / ex_f["total"] if ex_f["total"] else None,
+        "moe_mode": moe_mode,
+        "compute_term_s": compute_term,
+        "memory_term_s": memory_term,
+        "collective_term_s": collective_term,
+        "dominant": dominant,
+        "params": cfg.param_count(),
+        "active_params": cfg.active_param_count(),
+        "skipped": False,
+    }
+    if verbose:
+        print(f"[{arch} x {shape_name} x {'2x16x16' if multi_pod else '16x16'}] "
+              f"kind={kind} compile={t_compile:.1f}s "
+              f"compute={compute_term:.3f}s mem={memory_term:.3f}s "
+              f"coll={collective_term:.3f}s dom={dominant} "
+              f"useful={rec['useful_flops_ratio'] and round(rec['useful_flops_ratio'],3)}")
+        if mem:
+            print("  memory_analysis:", {k: f"{v/2**30:.2f}GiB" for k, v in mem.items()
+                                         if isinstance(v, int)})
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="benchmarks/artifacts")
+    ap.add_argument("--dtype", default="bfloat16")
+    ap.add_argument("--optimized", action="store_true",
+                    help="beyond-paper config: expert-parallel sorted MoE + "
+                         "vocab padding where the TP axis does not divide")
+    args = ap.parse_args()
+
+    dtype = getattr(jnp, args.dtype)
+    archs = list_archs() if (args.all or not args.arch) else [args.arch]
+    shapes = list(INPUT_SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    os.makedirs(args.out, exist_ok=True)
+    results = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                kw = {}
+                if args.optimized:
+                    kw["moe_mode"] = "sorted_grouped"
+                    kw["tag"] = "optimized"
+                    if get_config(arch).vocab_size % 16:
+                        kw["cfg_overrides"] = {"pad_vocab_multiple": 2048}
+                try:
+                    rec = dryrun_one(arch, shape, multi_pod=mp, dtype=dtype,
+                                     **kw)
+                except Exception as e:
+                    rec = {"arch": arch, "shape": shape, "multi_pod": mp,
+                           "error": f"{type(e).__name__}: {e}", "skipped": False}
+                    print(f"[{arch} x {shape}] FAILED: {rec['error']}")
+                results.append(rec)
+                fn = f"{args.out}/dryrun_{arch.replace('.','_')}_{shape}_" \
+                     f"{'mp' if mp else 'sp'}.json"
+                with open(fn, "w") as f:
+                    json.dump(rec, f, indent=1)
+    n_err = sum(1 for r in results if r.get("error"))
+    n_skip = sum(1 for r in results if r.get("skipped"))
+    print(f"\ndone: {len(results)} combos, {n_err} errors, {n_skip} skipped")
+    return 1 if n_err else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

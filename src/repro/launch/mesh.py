@@ -1,0 +1,23 @@
+"""Production mesh definitions (TPU v5e).
+
+Functions, not module-level constants: importing this module never touches
+jax device state. The dry-run sets XLA_FLAGS host-device-count *before* any
+jax import (launch/dryrun.py lines 1-2).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 (256 chips) single pod; 2x16x16 (512 chips) multi-pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Small mesh over the locally visible devices (tests / examples)."""
+    n = len(jax.devices())
+    assert data * model <= n, (data, model, n)
+    return jax.make_mesh((data, model), ("data", "model"))

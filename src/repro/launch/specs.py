@@ -1,0 +1,89 @@
+"""ShapeDtypeStruct input specs for every (architecture x input shape)
+combination — the dry-run lowers against these; nothing is allocated.
+
+Shape semantics (assignment):
+  train_4k      train_step   tokens/targets/mask [B, S]
+  prefill_32k   prefill      tokens [B, S] + empty cache of capacity S
+  decode_32k    serve_step   ONE token + cache of seq_len
+  long_500k     serve_step   ONE token + cache of seq_len (sub-quadratic
+                             archs only; gemma2 runs its documented
+                             local-window serving variant)
+
+[vlm]/[audio] carve-out: patch/frame embeddings appear as precomputed
+inputs of the right shape (the frontend itself is stubbed).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.models import api
+from repro.models.transformer import VISION_EMBED_DIM
+
+SDS = jax.ShapeDtypeStruct
+
+
+def params_specs(cfg: ModelConfig, dtype=jnp.bfloat16):
+    return jax.eval_shape(lambda: api.init_params(jax.random.PRNGKey(0), cfg,
+                                                  dtype=dtype))
+
+
+def opt_specs(cfg: ModelConfig, optimizer, dtype=jnp.bfloat16):
+    p = params_specs(cfg, dtype)
+    return jax.eval_shape(optimizer.init, p)
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    return jax.eval_shape(lambda: api.init_cache(cfg, batch, max_len,
+                                                 dtype=dtype))
+
+
+def batch_specs(cfg: ModelConfig, shape: InputShape, *, train: bool,
+                dtype=jnp.bfloat16) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    text = S
+    out: Dict[str, Any] = {}
+    if cfg.modality == "vision":
+        text = S - cfg.frontend_tokens
+        out["patch_embeds"] = SDS((B, cfg.frontend_tokens, VISION_EMBED_DIM), dtype)
+    if cfg.modality == "audio" and train:
+        out["frames"] = SDS((B, cfg.encoder_seq, cfg.d_model), dtype)
+    out["tokens"] = SDS((B, text), jnp.int32)
+    if train:
+        out["targets"] = SDS((B, text), jnp.int32)
+        out["mask"] = SDS((B, text), jnp.float32)
+    return out
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape, optimizer=None,
+                dtype=jnp.bfloat16) -> Tuple[Tuple, str]:
+    """Returns (args_specs, step_kind) for the jitted step of this shape.
+
+    train:   step(params, opt_state, batch)
+    prefill: step(params, cache, batch)
+    decode:  step(params, cache, tokens, positions)
+    """
+    if shape.kind == "train":
+        assert optimizer is not None
+        return ((params_specs(cfg, dtype), opt_specs(cfg, optimizer, dtype),
+                 batch_specs(cfg, shape, train=True, dtype=dtype)), "train")
+    if shape.kind == "prefill":
+        return ((params_specs(cfg, dtype),
+                 cache_specs(cfg, shape.global_batch, shape.seq_len, dtype),
+                 batch_specs(cfg, shape, train=False, dtype=dtype)), "prefill")
+    # decode: one new token against a cache of seq_len
+    B = shape.global_batch
+    return ((params_specs(cfg, dtype),
+             cache_specs(cfg, B, shape.seq_len, dtype),
+             SDS((B, 1), jnp.int32), SDS((B, 1), jnp.int32)), "decode")
+
+
+def runnable(cfg: ModelConfig, shape: InputShape) -> Tuple[bool, str]:
+    """Whether this (arch, shape) pair is in scope (long_500k policy)."""
+    if shape.name == "long_500k" and not cfg.supports_long_context:
+        return False, cfg.long_context_note or "full attention; skipped per spec"
+    return True, ""

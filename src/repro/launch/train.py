@@ -1,0 +1,101 @@
+"""End-to-end training driver for the assigned LM backbones.
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen1.5-0.5b \
+      --steps 50 --batch 8 --seq 128 [--reduced] [--impl pallas] \
+      [--ckpt out.npz]
+
+Runs on whatever devices are visible (1 CPU here; the production mesh is
+exercised by launch/dryrun.py). Uses the arch's own schedule (WSD for
+minicpm, cosine otherwise) and the reduced variant by default so the e2e
+path is runnable on CPU.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import save_tree
+from repro.configs import get_config
+from repro.data.synthetic import batch_tokens, make_token_dataset
+from repro.models import api
+from repro.optim import make_optimizer
+from repro.optim.schedules import get_schedule
+
+
+def train(arch: str, steps: int = 50, batch: int = 8, seq: int = 128,
+          reduced: bool = True, impl: str = "jnp", lr: float = 3e-4,
+          ckpt: str | None = None, seed: int = 0, log_every: int = 10,
+          optimizer: str = "adamw"):
+    cfg = get_config(arch)
+    if reduced:
+        cfg = cfg.reduced()
+    sched = get_schedule(cfg.schedule, lr, steps, warmup=max(steps // 20, 1))
+    opt = make_optimizer(optimizer, sched)
+
+    key = jax.random.PRNGKey(seed)
+    params = api.init_params(key, cfg)
+    state = opt.init(params)
+    n = sum(x.size for x in jax.tree.leaves(params))
+    print(f"[train] {arch} ({'reduced' if reduced else 'FULL'}): "
+          f"{n / 1e6:.2f}M params, schedule={cfg.schedule}")
+
+    step_fn = jax.jit(api.make_train_step(cfg, opt, impl=impl))
+    toks = make_token_dataset(cfg.vocab_size, batch * (seq + 1) * (steps + 2),
+                              seed=seed)
+
+    extras = {}
+    if cfg.modality == "vision":
+        extras["patch_embeds"] = jnp.asarray(
+            np.random.default_rng(seed).normal(
+                size=(batch, cfg.frontend_tokens, 1024)), jnp.float32)
+    if cfg.modality == "audio":
+        extras["frames"] = jnp.asarray(
+            np.random.default_rng(seed).normal(
+                size=(batch, cfg.encoder_seq, cfg.d_model)), jnp.float32)
+
+    losses = []
+    t0 = time.time()
+    for s in range(steps):
+        b = {k: jnp.asarray(v) for k, v in
+             batch_tokens(toks, batch, seq, s).items()}
+        b.update(extras)
+        params, state, m = step_fn(params, state, b)
+        losses.append(float(m["loss"]))
+        if s % log_every == 0 or s == steps - 1:
+            print(f"  step {s:4d} loss {losses[-1]:.4f} "
+                  f"ce {float(m['ce']):.4f} gnorm {float(m['grad_norm']):.2f} "
+                  f"({(time.time() - t0) / (s + 1):.2f}s/step)")
+    if ckpt:
+        save_tree(ckpt, params, metadata={"arch": arch, "steps": steps,
+                                          "final_loss": losses[-1]})
+        print(f"[train] checkpoint -> {ckpt}")
+    return params, losses
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--full", action="store_true",
+                    help="full assigned config (needs real accelerators)")
+    ap.add_argument("--impl", default="jnp", choices=["jnp", "pallas"])
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt", default=None)
+    args = ap.parse_args()
+    _, losses = train(args.arch, args.steps, args.batch, args.seq,
+                      reduced=not args.full, impl=args.impl, lr=args.lr,
+                      ckpt=args.ckpt)
+    ok = losses[-1] < losses[0]
+    print(f"[train] loss {losses[0]:.3f} -> {losses[-1]:.3f} "
+          f"({'improved' if ok else 'NOT improved'})")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

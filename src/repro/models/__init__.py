@@ -1,0 +1,2 @@
+"""Model zoo: composable blocks + unified transformer for the 10 assigned
+architectures, plus the paper's ResNet-18 CNN (models/cnn.py)."""

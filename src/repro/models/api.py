@@ -1,0 +1,106 @@
+"""High-level model API: train / prefill / decode step builders used by the
+launcher, the dry-run, the FL runtime, and the tests.
+
+All steps are pure jittable functions; distribution is applied by the caller
+via in_shardings/out_shardings (launch/dryrun.py, launch/train.py).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as tfm
+from repro.optim.optimizers import Optimizer, clip_by_global_norm
+
+
+def init_params(key, cfg: ModelConfig, dtype=jnp.float32):
+    return tfm.init_params(key, cfg, dtype)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.float32):
+    return tfm.init_cache(cfg, batch, max_len, dtype)
+
+
+# ---------------------------------------------------------------------------
+def make_loss_fn(cfg: ModelConfig, *, impl="jnp", kv_chunk=1024, remat=False):
+    def loss(params, batch):
+        return tfm.loss_fn(params, cfg, batch, impl=impl, kv_chunk=kv_chunk,
+                           remat=remat)
+    return loss
+
+
+def make_train_step(cfg: ModelConfig, optimizer: Optimizer, *, impl="jnp",
+                    kv_chunk=1024, remat=False, clip_norm: float = 1.0,
+                    grad_weight: bool = False):
+    """Returns step(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    grad_weight: if True, batch may carry "example_weight" [B] multiplying
+    per-example losses — this is how GenFV's rho_n*kappa weighting enters the
+    jitted hot loop (DESIGN.md §4).
+    """
+    loss_fn = make_loss_fn(cfg, impl=impl, kv_chunk=kv_chunk, remat=remat)
+
+    def step(params, opt_state, batch):
+        (loss, parts), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+        grads, gn = clip_by_global_norm(grads, clip_norm)
+        params, opt_state = optimizer.update(grads, opt_state, params)
+        metrics = {"loss": loss, "ce": parts["ce"], "aux": parts["aux"],
+                   "grad_norm": gn}
+        return params, opt_state, metrics
+
+    return step
+
+
+# ---------------------------------------------------------------------------
+def make_prefill_step(cfg: ModelConfig, *, impl="jnp", kv_chunk=1024,
+                      long_window: Optional[int] = None):
+    """prefill(params, cache, batch) -> (last_logits [B,V], cache)."""
+
+    def prefill(params, cache, batch):
+        hidden, cache, _ = tfm.forward(params, cfg, batch, cache=cache,
+                                       impl=impl, kv_chunk=kv_chunk,
+                                       long_window=long_window,
+                                       logits_mode="hidden")
+        logits = tfm.unembed(params, cfg, hidden[:, -1:])
+        return logits[:, 0], cache
+
+    return prefill
+
+
+def make_decode_step(cfg: ModelConfig, *, impl="jnp", kv_chunk=1024,
+                     long_window: Optional[int] = None):
+    """decode(params, cache, tokens [B,1], positions [B,1])
+    -> (logits [B,V], cache). ONE new token against the existing cache."""
+
+    def decode(params, cache, tokens, positions):
+        batch = {"tokens": tokens, "positions": positions}
+        hidden, cache, _ = tfm.forward(params, cfg, batch, cache=cache,
+                                       impl=impl, kv_chunk=kv_chunk,
+                                       long_window=long_window,
+                                       logits_mode="hidden")
+        logits = tfm.unembed(params, cfg, hidden)
+        return logits[:, 0], cache
+
+    return decode
+
+
+def greedy_generate(cfg, params, prompt, steps: int, *, impl="jnp",
+                    max_len: Optional[int] = None, dtype=jnp.float32):
+    """Reference generation loop (prefill + greedy decode). Test/demo helper."""
+    B, S = prompt.shape
+    max_len = max_len or (S + steps)
+    cache = init_cache(cfg, B, max_len, dtype)
+    prefill = jax.jit(make_prefill_step(cfg, impl=impl))
+    decode = jax.jit(make_decode_step(cfg, impl=impl))
+    logits, cache = prefill(params, cache, {"tokens": prompt})
+    out = [jnp.argmax(logits, -1)]
+    pos = jnp.full((B, 1), S, jnp.int32)
+    for _ in range(steps - 1):
+        logits, cache = decode(params, cache, out[-1][:, None], pos)
+        out.append(jnp.argmax(logits, -1))
+        pos = pos + 1
+    return jnp.stack(out, axis=1)

@@ -1,0 +1,259 @@
+"""Attention: GQA/MQA/MHA with RoPE, sliding window, logit soft-cap, QKV bias,
+ring-buffer KV caches, and cross-attention (enc-dec).
+
+Two SDPA implementations:
+  * "jnp"   — chunked online-softmax (flash-style) in pure jnp. Default; used
+              by the dry-run (XLA-native) and CPU tests. The kv-chunk loop is
+              a `lax.scan` so HLO stays small at 32k/512k context and the
+              working set never materializes S_q x S_kv.
+  * "pallas" — kernels/flash_attention.py (TPU target; interpret=True on CPU).
+
+All masking is *position-based*: each cached slot stores its absolute token
+position (-1 = empty), so causality, sliding windows and ring-buffer wraparound
+fall out of one comparison.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ATTN_LOCAL
+from repro.distributed.autoshard import aconstrain
+from repro.models.layers import dense_init, rope
+
+NEG_INF = -2.0 ** 30  # large finite; avoids NaN from (-inf) - (-inf)
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+def init_attention(key, cfg, dtype=jnp.float32):
+    d, nq, nkv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], d, nq * hd, dtype),
+        "wk": dense_init(ks[1], d, nkv * hd, dtype),
+        "wv": dense_init(ks[2], d, nkv * hd, dtype),
+        "wo": dense_init(ks[3], nq * hd, d, dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((nq * hd,), dtype)
+        p["bk"] = jnp.zeros((nkv * hd,), dtype)
+        p["bv"] = jnp.zeros((nkv * hd,), dtype)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# KV cache (ring buffer for local layers)
+# ---------------------------------------------------------------------------
+def init_kv_cache(cfg, kind: str, batch: int, max_len: int, dtype=jnp.float32):
+    cap = max_len
+    if kind == ATTN_LOCAL and cfg.sliding_window:
+        cap = min(max_len, cfg.sliding_window)
+    return {
+        "k": jnp.zeros((batch, cap, cfg.num_kv_heads, cfg.head_dim), dtype),
+        "v": jnp.zeros((batch, cap, cfg.num_kv_heads, cfg.head_dim), dtype),
+        "pos": jnp.full((batch, cap), -1, jnp.int32),
+        # PER-ROW write cursor: rows advance independently (continuous
+        # batching admits sequences at different positions), and the
+        # mask-based writes below stay shardable over any cache axis.
+        "idx": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def _cache_write_decode(cache, k_new, v_new, positions):
+    """Write one token (k_new: [B,1,nkv,hd]) at per-row slot idx % cap.
+
+    Mask-based scatter (arange == slot) instead of dynamic_update_slice:
+    every row writes its own ring position, and GSPMD shards it without
+    gathering the cache."""
+    cap = cache["k"].shape[1]
+    slot = (cache["idx"] % cap)[:, None]                     # [B,1]
+    lane = jnp.arange(cap, dtype=jnp.int32)[None, :]         # [1,cap]
+    hit = lane == slot                                       # [B,cap]
+    k = jnp.where(hit[..., None, None], k_new.astype(cache["k"].dtype),
+                  cache["k"])
+    v = jnp.where(hit[..., None, None], v_new.astype(cache["v"].dtype),
+                  cache["v"])
+    pos = jnp.where(hit, positions.astype(jnp.int32), cache["pos"])
+    return {"k": k, "v": v, "pos": pos, "idx": cache["idx"] + 1}
+
+
+def _cache_write_prefill(cache, k_full, v_full, positions):
+    """Fill the cache with the (last cap tokens of the) prefill sequence."""
+    cap = cache["k"].shape[1]
+    S = k_full.shape[1]
+    if S >= cap:
+        k, v, pos = k_full[:, -cap:], v_full[:, -cap:], positions[:, -cap:]
+        idx = cache["idx"] + S
+        return {"k": k.astype(cache["k"].dtype), "v": v.astype(cache["v"].dtype),
+                "pos": pos.astype(jnp.int32), "idx": idx}
+    k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_full.astype(cache["k"].dtype), 0, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_full.astype(cache["v"].dtype), 0, axis=1)
+    pos = jax.lax.dynamic_update_slice_in_dim(cache["pos"], positions.astype(jnp.int32), 0, axis=1)
+    return {"k": k, "v": v, "pos": pos, "idx": cache["idx"] + S}
+
+
+# ---------------------------------------------------------------------------
+# Chunked online-softmax SDPA (pure jnp)
+# ---------------------------------------------------------------------------
+def sdpa_chunked(q, k, v, q_pos, kv_pos, *, causal: bool = True,
+                 window: Optional[int] = None, attn_softcap=None,
+                 kv_chunk: int = 1024, q_chunk: int = 512,
+                 remat: bool = False):
+    """q: [B,Sq,nq,hd]; k,v: [B,Skv,nkv,hd]; q_pos: [B,Sq]; kv_pos: [B,Skv].
+
+    Flash-style double blocking: outer scan over q chunks, inner scan over
+    kv chunks, online softmax in fp32. The live score block is
+    [B, nkv, g, q_chunk, kv_chunk] — never Sq x Skv.
+
+    Returns [B,Sq,nq,hd] (fp32 accumulated, cast back to q.dtype).
+    """
+    B, Sq, nq, hd = q.shape
+    Skv, nkv = k.shape[1], k.shape[2]
+    g = nq // nkv
+    scale = hd ** -0.5
+
+    # pad kv to a chunk multiple; padded slots get pos = -1 (masked everywhere)
+    kv_chunk = min(kv_chunk, Skv)
+    pad = (-Skv) % kv_chunk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_pos = jnp.pad(kv_pos, ((0, 0), (0, pad)), constant_values=-1)
+    n_kv = (Skv + pad) // kv_chunk
+    kc = k.reshape(B, n_kv, kv_chunk, nkv, hd).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, n_kv, kv_chunk, nkv, hd).transpose(1, 0, 2, 3, 4)
+    pc = kv_pos.reshape(B, n_kv, kv_chunk).transpose(1, 0, 2)
+
+    # pad q to a chunk multiple; padded q rows get pos large-negative so the
+    # causal mask kills everything and the row normalizer is clamped.
+    q_chunk = min(q_chunk, Sq)
+    qpad = (-Sq) % q_chunk
+    if qpad:
+        q = jnp.pad(q, ((0, 0), (0, qpad), (0, 0), (0, 0)))
+        q_pos = jnp.pad(q_pos, ((0, 0), (0, qpad)), constant_values=-(2 ** 30))
+    n_q = (Sq + qpad) // q_chunk
+    qg = (q * scale).reshape(B, n_q, q_chunk, nkv, g, hd).transpose(1, 0, 2, 3, 4, 5)
+    qp = q_pos.reshape(B, n_q, q_chunk).transpose(1, 0, 2)
+
+    def kv_body(carry, xs):
+        acc, m, l, q_i, qp_i = carry
+        k_j, v_j, p_j = xs                                  # [B,C,nkv,hd], [B,C]
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", q_i, k_j,
+                       preferred_element_type=jnp.float32)  # [B,nkv,g,Qc,C]
+        if attn_softcap is not None:
+            s = attn_softcap * jnp.tanh(s / attn_softcap)
+        valid = p_j[:, None, None, None, :] >= 0
+        if causal:
+            rel = qp_i[:, None, None, :, None] - p_j[:, None, None, None, :]
+            valid &= rel >= 0
+            if window is not None:
+                valid &= rel < window
+        s = jnp.where(valid, s, NEG_INF)
+        m_i = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_i[..., None])
+        alpha = jnp.exp(m - m_i)
+        l_i = l * alpha + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bhgqk,bkhd->bqhgd", p, v_j.astype(jnp.float32),
+                        preferred_element_type=jnp.float32)
+        acc_i = acc * alpha.transpose(0, 3, 1, 2)[..., None] + pv
+        return (acc_i, m_i, l_i, q_i, qp_i), None
+
+    def q_body(_, xs):
+        q_i, qp_i = xs                                      # [B,Qc,nkv,g,hd]
+        acc0 = jnp.zeros((B, q_chunk, nkv, g, hd), jnp.float32)
+        m0 = jnp.full((B, nkv, g, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, nkv, g, q_chunk), jnp.float32)
+        (acc, m, l, _, _), _ = jax.lax.scan(
+            kv_body, (acc0, m0, l0, q_i, qp_i), (kc, vc, pc))
+        l = jnp.maximum(l, 1e-30).transpose(0, 3, 1, 2)[..., None]
+        return None, (acc / l).astype(q.dtype)
+
+    # Checkpoint at the q-block level: the inner kv scan would otherwise save
+    # its per-step carries (the fp32 accumulators) across BOTH scan levels
+    # for backward — observed 36 GiB/device at 4k train. Recomputing the kv
+    # sweep per q block bounds the resident set to one q-block's accumulators
+    # (flash-attention backward, §Perf hillclimb 2 iter 2).
+    q_body = jax.checkpoint(q_body)
+
+    if n_q == 1:
+        _, out = q_body(None, (qg[0], qp[0]))
+        out = out[None]
+    else:
+        _, out = jax.lax.scan(q_body, None, (qg, qp))
+    out = out.transpose(1, 0, 2, 3, 4, 5).reshape(B, Sq + qpad, nq, hd)
+    return out[:, :Sq]
+
+
+# ---------------------------------------------------------------------------
+# Full attention layer
+# ---------------------------------------------------------------------------
+def attention(p, x, cfg, kind: str, positions, cache=None, cross_kv=None,
+              impl: str = "jnp", kv_chunk: int = 1024, remat: bool = False,
+              causal: bool = True):
+    """x: [B,S,d]. Returns (y [B,S,d], new_cache).
+
+    cross_kv: optional dict(k,v,pos) for encoder-decoder cross attention
+    (no cache update, non-causal over encoder frames).
+    """
+    B, S, _ = x.shape
+    nq, nkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+
+    q = x @ p["wq"]
+    if "bq" in p:
+        q = q + p["bq"].astype(q.dtype)
+    q = aconstrain(q.reshape(B, S, nq, hd), ("batch", None, "model", None))
+
+    if cross_kv is not None:
+        q = rope(q, positions, cfg.rope_theta) if cfg.norm == "rmsnorm" else q
+        out = _sdpa_dispatch(q, cross_kv["k"], cross_kv["v"], positions,
+                             cross_kv["pos"], causal=False, window=None,
+                             attn_softcap=cfg.attn_softcap, impl=impl,
+                             kv_chunk=kv_chunk, remat=remat)
+        return out.reshape(B, S, nq * hd) @ p["wo"], cache
+
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if "bk" in p:
+        k = k + p["bk"].astype(k.dtype)
+        v = v + p["bv"].astype(v.dtype)
+    k = aconstrain(k.reshape(B, S, nkv, hd), ("batch", None, "model", None))
+    v = aconstrain(v.reshape(B, S, nkv, hd), ("batch", None, "model", None))
+
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+
+    window = cfg.sliding_window if kind == ATTN_LOCAL else None
+
+    new_cache = cache
+    if cache is not None:
+        if S == 1:
+            new_cache = _cache_write_decode(cache, k, v, positions)
+        else:
+            new_cache = _cache_write_prefill(cache, k, v, positions)
+        k_all = new_cache["k"]
+        v_all = new_cache["v"]
+        kv_pos = new_cache["pos"]
+    else:
+        k_all, v_all, kv_pos = k, v, positions
+
+    out = _sdpa_dispatch(q, k_all, v_all, positions, kv_pos, causal=causal,
+                         window=window, attn_softcap=cfg.attn_softcap,
+                         impl=impl, kv_chunk=kv_chunk, remat=remat)
+    out = aconstrain(out, ("batch", None, "model", None))
+    return out.reshape(B, S, nq * hd) @ p["wo"], new_cache
+
+
+def _sdpa_dispatch(q, k, v, q_pos, kv_pos, *, causal, window, attn_softcap,
+                   impl, kv_chunk, remat):
+    if impl == "pallas":
+        from repro.kernels import ops
+        return ops.flash_attention(q, k, v, q_pos, kv_pos, causal=causal,
+                                   window=window, softcap=attn_softcap)
+    return sdpa_chunked(q, k, v, q_pos, kv_pos, causal=causal, window=window,
+                        attn_softcap=attn_softcap, kv_chunk=kv_chunk,
+                        remat=remat)

@@ -1,0 +1,129 @@
+"""Shared neural-net building blocks (pure functional JAX).
+
+Parameters are plain pytrees (nested dicts of jnp arrays); every layer is a
+pair of `init_*` / apply functions. Compute dtype follows the input; params
+are created in `param_dtype`.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.float32, scale: float | None = None):
+    scale = (1.0 / d_in) ** 0.5 if scale is None else scale
+    return (jax.random.normal(key, (d_in, d_out), dtype=jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype=jnp.float32):
+    return (jax.random.normal(key, (vocab, d), dtype=jnp.float32) * (1.0 / d) ** 0.5).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+def init_rmsnorm(d: int, dtype=jnp.float32):
+    return {"scale": jnp.zeros((d,), dtype=dtype)}  # gemma-style (1+scale)
+
+
+def rmsnorm(p, x, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + p["scale"].astype(jnp.float32))).astype(dt)
+
+
+def init_layernorm(d: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype=dtype), "bias": jnp.zeros((d,), dtype=dtype)}
+
+
+def layernorm(p, x, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (x * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)).astype(dt)
+
+
+def init_norm(cfg, d=None, dtype=jnp.float32):
+    d = d if d is not None else cfg.d_model
+    return init_layernorm(d, dtype) if cfg.norm == "layernorm" else init_rmsnorm(d, dtype)
+
+
+def apply_norm(cfg, p, x):
+    return layernorm(p, x) if "bias" in p else rmsnorm(p, x)
+
+
+# ---------------------------------------------------------------------------
+# Soft-capping (gemma2 / grok)
+# ---------------------------------------------------------------------------
+def softcap(x, cap):
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+def rope(x, positions, theta: float = 10000.0):
+    """x: [..., seq, heads, head_dim]; positions: [..., seq] int32."""
+    head_dim = x.shape[-1]
+    half = head_dim // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., :, None].astype(jnp.float32) * freq  # [..., S, half]
+    cos = jnp.cos(angles)[..., :, None, :]                       # [..., S, 1, half]
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    dt = x.dtype
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([x1f * cos - x2f * sin, x2f * cos + x1f * sin], axis=-1)
+    return out.astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# MLPs: swiglu / geglu / gelu
+# ---------------------------------------------------------------------------
+def init_mlp(key, cfg, dtype=jnp.float32):
+    d, f = cfg.d_model, cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    if cfg.mlp_type in ("swiglu", "geglu"):
+        return {"w_gate": dense_init(k1, d, f, dtype),
+                "w_up": dense_init(k2, d, f, dtype),
+                "w_down": dense_init(k3, f, d, dtype)}
+    return {"w_up": dense_init(k1, d, f, dtype),
+            "w_down": dense_init(k2, f, d, dtype)}
+
+
+def mlp(p, x, mlp_type: str):
+    if mlp_type in ("swiglu", "geglu"):
+        gate = x @ p["w_gate"]
+        act = jax.nn.silu(gate) if mlp_type == "swiglu" else jax.nn.gelu(gate, approximate=True)
+        return (act * (x @ p["w_up"])) @ p["w_down"]
+    return jax.nn.gelu(x @ p["w_up"], approximate=True) @ p["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# Causal depthwise temporal conv (Griffin / xLSTM front conv)
+# ---------------------------------------------------------------------------
+def init_conv1d(key, width: int, kernel: int, dtype=jnp.float32):
+    return {"w": (jax.random.normal(key, (kernel, width)) * (1.0 / kernel) ** 0.5).astype(dtype),
+            "b": jnp.zeros((width,), dtype=dtype)}
+
+
+def causal_conv1d(p, x, state=None):
+    """Depthwise causal conv. x: [B, S, W]. state: [B, K-1, W] trailing inputs.
+    Returns (y, new_state)."""
+    k = p["w"].shape[0]
+    if state is None:
+        state = jnp.zeros(x.shape[:-2] + (k - 1, x.shape[-1]), dtype=x.dtype)
+    xin = jnp.concatenate([state, x], axis=-2)           # [B, S+K-1, W]
+    y = sum(xin[..., i:i + x.shape[-2], :] * p["w"][i] for i in range(k))
+    y = y + p["b"]
+    new_state = xin[..., -(k - 1):, :] if k > 1 else state
+    return y.astype(x.dtype), new_state

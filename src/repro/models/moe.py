@@ -1,0 +1,194 @@
+"""Mixture-of-Experts layer (grok-1: 8e top-2, olmoe: 64e top-8).
+
+Two compute modes:
+
+* ``dense``  — every expert runs on every token; outputs are combined with
+  router weights. Exact, simple, and the *paper-faithful baseline* for the
+  roofline table (the FLOP overcount factor E/k is reported there). This is
+  also what several production JAX frameworks ship as the non-kernel path.
+* ``sorted`` — dropless-style dispatch: tokens are sorted by expert id and
+  each expert processes a fixed-capacity contiguous block (scan over
+  experts). FLOPs ~ k/E of dense mode (+capacity slack); used by the §Perf
+  hillclimb. Overflowing tokens beyond capacity are dropped from the expert
+  (they keep their residual path), underflow is padded — standard
+  capacity-factor semantics.
+
+Router: softmax over expert logits, top-k, renormalized combine weights,
+plus the standard load-balancing auxiliary loss (Switch/OLMoE style).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.autoshard import aconstrain, logical_size
+from repro.models.layers import dense_init
+
+
+def init_moe(key, cfg, dtype=jnp.float32):
+    e = cfg.moe
+    d, f = cfg.d_model, e.d_expert
+    ks = jax.random.split(key, 4)
+    glu = cfg.mlp_type in ("swiglu", "geglu")
+
+    def stack(k, d_in, d_out):
+        kk = jax.random.split(k, e.num_experts)
+        return jnp.stack([dense_init(ki, d_in, d_out, dtype) for ki in kk])
+
+    p = {"router": dense_init(ks[0], d, e.num_experts, dtype),
+         "w_up": stack(ks[2], d, f),
+         "w_down": stack(ks[3], f, d)}
+    if glu:
+        p["w_gate"] = stack(ks[1], d, f)
+    return p
+
+
+def _expert_ffn(p_e, x, mlp_type: str):
+    """x: [..., d]; p_e: single expert's params (leading expert dim removed)."""
+    if "w_gate" in p_e:
+        gate = x @ p_e["w_gate"]
+        act = jax.nn.silu(gate) if mlp_type == "swiglu" else jax.nn.gelu(gate, approximate=True)
+        return (act * (x @ p_e["w_up"])) @ p_e["w_down"]
+    return jax.nn.gelu(x @ p_e["w_up"], approximate=True) @ p_e["w_down"]
+
+
+def router_topk(p, x, cfg) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Returns (combine [T,k], expert_idx [T,k] int32, aux_loss scalar).
+
+    x: [T, d] flattened tokens.
+    """
+    e = cfg.moe
+    logits = (x @ p["router"]).astype(jnp.float32)          # [T, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    combine, idx = jax.lax.top_k(probs, e.experts_per_token)  # [T, k]
+    combine = combine / jnp.maximum(combine.sum(-1, keepdims=True), 1e-9)
+    # load-balance aux loss: E * sum_e f_e * P_e
+    T = x.shape[0]
+    onehot = jax.nn.one_hot(idx, e.num_experts, dtype=jnp.float32)  # [T,k,E]
+    f_e = onehot.sum((0, 1)) / (T * e.experts_per_token)
+    p_e = probs.mean(0)
+    aux = e.num_experts * jnp.sum(f_e * p_e)
+    return combine.astype(x.dtype), idx.astype(jnp.int32), aux
+
+
+def moe_dense(p, x, cfg):
+    """Dense mode. x: [B, S, d] -> (y, aux_loss)."""
+    B, S, d = x.shape
+    xt = aconstrain(x.reshape(B * S, d), ("batch", None))
+    combine, idx, aux = router_topk(p, xt, cfg)
+    e = cfg.moe
+    # weight per expert per token: sum combine where idx==e  -> [T, E]
+    w = jnp.zeros((xt.shape[0], e.num_experts), x.dtype)
+    w = w.at[jnp.arange(xt.shape[0])[:, None], idx].add(combine)
+
+    def one(p_e):
+        return _expert_ffn(p_e, xt, cfg.mlp_type)            # [T, d]
+
+    # scan over experts to keep the HLO body small & the intermediate bounded
+    def body(acc, pe_we):
+        p_e, w_e = pe_we
+        return acc + one(p_e) * w_e[:, None], None
+
+    acc0 = jnp.zeros_like(xt)
+    experts = {k: v for k, v in p.items() if k != "router"}
+    (y, _) = jax.lax.scan(body, acc0, (experts, w.T))
+    return y.reshape(B, S, d), aux
+
+
+def moe_sorted(p, x, cfg, capacity_factor: float = 1.25,
+               n_groups: int = 1):
+    """Sort-based dropless-style mode: FLOPs ~ k/E of dense (+slack).
+
+    Tokens are replicated k times, sorted by assigned expert, and each expert
+    consumes a fixed-size contiguous block of the sorted stream (capacity
+    C = ceil(T*k/E * cf)). Tokens landing beyond their expert's capacity are
+    dropped (residual path keeps them).
+
+    n_groups > 1 splits the token stream into independent dispatch groups
+    (GShard-style): with the group axis sharded over ('pod','data'), the
+    argsort/gather/scatter stay device-local instead of sorting a globally
+    sharded token axis (which forces collectives) — §Perf hillclimb 1 iter 2.
+    """
+    B, S, d = x.shape
+    e = cfg.moe
+    k = e.experts_per_token
+    T_all = B * S
+    if T_all % n_groups:
+        n_groups = 1
+    G = n_groups
+    Tg = T_all // G
+
+    xt = x.reshape(G, Tg, d)
+    if G > 1:
+        xt = aconstrain(xt, ("batch", None, None))
+    combine, idx, aux = router_topk(p, xt.reshape(T_all, d), cfg)
+    combine = combine.reshape(G, Tg, k)
+    idx = idx.reshape(G, Tg, k)
+
+    C = int(-(-Tg * k * capacity_factor // e.num_experts))
+
+    def dispatch(xt_g, comb_g, idx_g):
+        """Per-group index plumbing (device-local when groups are sharded)."""
+        flat_exp = idx_g.reshape(-1)                          # [Tg*k]
+        flat_tok = jnp.repeat(jnp.arange(Tg, dtype=jnp.int32), k)
+        flat_w = comb_g.reshape(-1)
+        order = jnp.argsort(flat_exp, stable=True)
+        sexp, stok, sw = flat_exp[order], flat_tok[order], flat_w[order]
+        pos = jnp.arange(Tg * k) - jnp.searchsorted(sexp, sexp, side="left")
+        keep = pos < C
+        dest = jnp.where(keep, sexp * C + pos, e.num_experts * C)
+        buf = jnp.zeros((e.num_experts * C + 1, d), x.dtype)
+        buf = buf.at[dest].set(xt_g[stok], mode="drop")
+        w = jnp.zeros((e.num_experts * C + 1,), x.dtype).at[dest].set(sw, mode="drop")
+        tok = jnp.full((e.num_experts * C + 1,), Tg, jnp.int32).at[dest].set(stok, mode="drop")
+        return (buf[:-1].reshape(e.num_experts, C, d), w[:-1], tok[:-1])
+
+    xb, buf_w, buf_tok = jax.vmap(dispatch)(xt, combine, idx)  # [G,E,C,d]...
+
+    # expert compute: EXPERT-PARALLEL — the dispatch buffer is resharded from
+    # group-parallel to expert-parallel (all-to-all), each model shard runs
+    # only its E/|model| experts, and the result is resharded back. When E
+    # does not divide the TP axis (grok: E=8 < 16) fall back to sharding the
+    # feature dim so the capacity buffers never replicate (hillclimb 1 note).
+    exp_spec = ("batch", "model", None, None)
+    if e.num_experts % max(logical_size("model"), 1):
+        exp_spec = ("batch", None, None, "model")
+    xb = aconstrain(xb, exp_spec)
+    glu = "w_gate" in p
+    up = jnp.einsum("gecd,edf->gecf", xb, p["w_up"])
+    if glu:
+        gate = jnp.einsum("gecd,edf->gecf", xb, p["w_gate"])
+        act = (jax.nn.silu(gate) if cfg.mlp_type == "swiglu"
+               else jax.nn.gelu(gate, approximate=True))
+        hidden = act * up
+    else:
+        hidden = jax.nn.gelu(up, approximate=True)
+    hidden = aconstrain(hidden, exp_spec)
+    yb = jnp.einsum("gecf,efd->gecd", hidden, p["w_down"])
+    yb = aconstrain(yb, exp_spec)
+    yb = yb.reshape(G, e.num_experts * C, d) * buf_w[..., None]
+
+    def combine_back(yb_g, tok_g):
+        out = jnp.zeros((Tg + 1, d), x.dtype).at[tok_g].add(yb_g, mode="drop")
+        return out[:-1]
+
+    y = jax.vmap(combine_back)(yb, buf_tok)                   # [G, Tg, d]
+    return y.reshape(B, S, d), aux
+
+
+def moe(p, x, cfg, mode: str = "dense"):
+    if mode == "sorted":
+        return moe_sorted(p, x, cfg)
+    if mode == "sorted_grouped":
+        # group count chosen so groups shard over ('pod','data') and stay
+        # large enough for balanced capacity (>= 2048 tokens per group)
+        T = x.shape[0] * x.shape[1]
+        n_groups = 1
+        for g in (64, 32, 16, 8, 4, 2):
+            if T % g == 0 and T // g >= 2048:
+                n_groups = g
+                break
+        return moe_sorted(p, x, cfg, n_groups=n_groups)
+    return moe_dense(p, x, cfg)

@@ -1,0 +1,112 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+Block:  x -> [gate branch: GeLU(W_g x)]
+           -> [rec branch: W_x x -> causal conv1d -> RG-LRU]
+        y = W_out (gate * rec)
+
+RG-LRU cell (eq. 1-4 of the Griffin paper):
+    r_t = sigmoid(W_a x_t)                      recurrence gate
+    i_t = sigmoid(W_i x_t)                      input gate
+    a_t = exp(-c * softplus(Lambda) * r_t)      in (0,1), c = 8
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Training/prefill uses a parallel associative scan over time (the linear
+recurrence (a,b) o (a',b') = (a a', a' b + b') is associative); decode is the
+one-step update. A Pallas TPU kernel for the scan lives in
+kernels/rglru_scan.py; this module is the pure-jnp reference path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.autoshard import aconstrain
+from repro.models.layers import causal_conv1d, dense_init, init_conv1d
+
+_C = 8.0
+
+
+def init_rglru(key, cfg, dtype=jnp.float32):
+    d = cfg.d_model
+    w = cfg.lru_width or d
+    ks = jax.random.split(key, 6)
+    return {
+        "w_gate": dense_init(ks[0], d, w, dtype),
+        "w_x": dense_init(ks[1], d, w, dtype),
+        "conv": init_conv1d(ks[2], w, cfg.conv_kernel, dtype),
+        "w_a": dense_init(ks[3], w, w, dtype),
+        "w_i": dense_init(ks[4], w, w, dtype),
+        # Lambda init so that a ~ U(0.9, 0.999)^(1/c)-ish (paper App. A)
+        "lam": jnp.linspace(0.5, 4.0, w).astype(dtype),
+        "w_out": dense_init(ks[5], w, d, dtype),
+    }
+
+
+def _gates(p, u):
+    """u: [..., w] (post-conv). Returns (log_a, beta*i*u) in fp32."""
+    uf = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(uf @ p["w_a"].astype(jnp.float32))
+    i = jax.nn.sigmoid(uf @ p["w_i"].astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(p["lam"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12))
+    return log_a, beta * i * uf
+
+
+def lru_scan(log_a, b):
+    """Parallel linear recurrence h_t = a_t h_{t-1} + b_t over axis -2.
+
+    log_a, b: [B, S, W] fp32. Returns h: [B, S, W] fp32.
+    """
+    def combine(x, y):
+        la1, b1 = x
+        la2, b2 = y
+        return la1 + la2, jnp.exp(la2) * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (log_a, b), axis=-2)
+    return h
+
+
+def rglru_block(p, x, cfg, state=None, impl: str = "jnp"):
+    """x: [B, S, d]. state: None or {"h": [B,W], "conv": [B,K-1,W]}.
+
+    Returns (y [B,S,d], new_state).
+    """
+    gate = aconstrain(jax.nn.gelu(x @ p["w_gate"], approximate=True),
+                      ("batch", None, "model"))
+    u = aconstrain(x @ p["w_x"], ("batch", None, "model"))
+    conv_state = None if state is None else state["conv"]
+    u, new_conv = causal_conv1d(p["conv"], u, conv_state)
+
+    log_a, b = _gates(p, u)
+    if state is not None and x.shape[1] == 1:
+        # decode: single-step update
+        h_prev = state["h"].astype(jnp.float32)
+        h = jnp.exp(log_a[:, 0]) * h_prev + b[:, 0]
+        h_seq = h[:, None]
+        new_h = h
+    else:
+        if impl == "pallas":
+            from repro.kernels import ops
+            h_seq = ops.rglru_scan(log_a, b)
+        else:
+            h_seq = lru_scan(log_a, b)
+        if state is not None:
+            h0 = state["h"].astype(jnp.float32)
+            # fold the incoming state into the whole scan: h_t += (prod a) h0
+            cum = jnp.cumsum(log_a, axis=1)
+            h_seq = h_seq + jnp.exp(cum) * h0[:, None]
+        new_h = h_seq[:, -1]
+
+    rec = h_seq.astype(x.dtype)
+    y = (gate * rec) @ p["w_out"]
+    new_state = None
+    if state is not None:
+        new_state = {"h": new_h.astype(state["h"].dtype), "conv": new_conv}
+    return y, new_state
+
+
+def init_rglru_state(cfg, batch: int, dtype=jnp.float32):
+    w = cfg.lru_width or cfg.d_model
+    return {"h": jnp.zeros((batch, w), jnp.float32),
+            "conv": jnp.zeros((batch, cfg.conv_kernel - 1, w), dtype)}

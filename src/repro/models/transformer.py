@@ -1,0 +1,470 @@
+"""Unified model: decoder-only / encoder-decoder / VLM backbones for all
+assigned architectures, built from the block zoo (attention, MoE, RG-LRU,
+xLSTM).
+
+Heterogeneous layer patterns (gemma2 local/global, griffin rglru:attn 2:1,
+xlstm 7:1) are executed as a `lax.scan` over *pattern groups*: one group =
+one instance of cfg.pattern, parameters stacked over groups. This keeps the
+HLO body to one pattern instance for any depth (42-64 layers), which bounds
+compile time across the 80 dry-run combinations. Layers left over when the
+pattern does not divide num_layers run unscanned ("remainder").
+
+Caches (KV ring buffers / recurrent states) mirror the same group structure
+so decode carries them through the scan.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import (ATTN_GLOBAL, ATTN_LOCAL, BLOCK_MLSTM,
+                                BLOCK_RGLRU, BLOCK_SLSTM, ModelConfig)
+from repro.distributed.autoshard import aconstrain
+from repro.models import xlstm as xl
+from repro.models.attention import attention, init_attention, init_kv_cache
+from repro.models.layers import (apply_norm, dense_init, embed_init,
+                                 init_mlp, init_norm, mlp, softcap)
+from repro.models.moe import init_moe, moe
+from repro.models.rglru import init_rglru, init_rglru_state, rglru_block
+
+VISION_EMBED_DIM = 1024      # CLIP-ViT-L patch embedding width (llava stub)
+
+
+# ---------------------------------------------------------------------------
+# Per-layer init / apply, dispatched on kind
+# ---------------------------------------------------------------------------
+def _init_layer(key, cfg: ModelConfig, kind: str, dtype, cross: bool):
+    ks = jax.random.split(key, 6)
+    p: Dict[str, Any] = {"ln1": init_norm(cfg, dtype=dtype)}
+    if kind in (ATTN_GLOBAL, ATTN_LOCAL):
+        p["attn"] = init_attention(ks[0], cfg, dtype)
+        if cross:
+            p["lnx"] = init_norm(cfg, dtype=dtype)
+            p["cross"] = init_attention(ks[1], cfg, dtype)
+        if cfg.moe is not None:
+            p["ln2"] = init_norm(cfg, dtype=dtype)
+            p["moe"] = init_moe(ks[2], cfg, dtype)
+        elif cfg.d_ff > 0:
+            p["ln2"] = init_norm(cfg, dtype=dtype)
+            p["mlp"] = init_mlp(ks[2], cfg, dtype)
+    elif kind == BLOCK_RGLRU:
+        p["rec"] = init_rglru(ks[0], cfg, dtype)
+        p["ln2"] = init_norm(cfg, dtype=dtype)
+        p["mlp"] = init_mlp(ks[1], cfg, dtype)
+    elif kind == BLOCK_MLSTM:
+        p["cell"] = xl.init_mlstm(ks[0], cfg, dtype)
+    elif kind == BLOCK_SLSTM:
+        p["cell"] = xl.init_slstm(ks[0], cfg, dtype)
+    else:
+        raise ValueError(kind)
+    return p
+
+
+def _init_layer_cache(cfg, kind: str, batch: int, max_len: int, dtype,
+                      cross: bool, enc_seq: int):
+    c: Dict[str, Any] = {}
+    if kind in (ATTN_GLOBAL, ATTN_LOCAL):
+        c["kv"] = init_kv_cache(cfg, kind, batch, max_len, dtype)
+        if cross:
+            c["cross_kv"] = {
+                "k": jnp.zeros((batch, enc_seq, cfg.num_kv_heads, cfg.head_dim), dtype),
+                "v": jnp.zeros((batch, enc_seq, cfg.num_kv_heads, cfg.head_dim), dtype),
+                "pos": jnp.zeros((batch, enc_seq), jnp.int32),
+            }
+    elif kind == BLOCK_RGLRU:
+        c["rec"] = init_rglru_state(cfg, batch, dtype)
+    elif kind == BLOCK_MLSTM:
+        c["cell"] = xl.init_mlstm_state(cfg, batch, dtype)
+    elif kind == BLOCK_SLSTM:
+        c["cell"] = xl.init_slstm_state(cfg, batch, dtype)
+    return c
+
+
+def _apply_layer(p, x, cfg, kind: str, positions, cache, *, impl, kv_chunk,
+                 cross: bool, decode: bool, long_window: Optional[int]):
+    """Returns (x, new_cache, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    new_cache = dict(cache) if cache is not None else None
+    if kind in (ATTN_GLOBAL, ATTN_LOCAL):
+        # long-context serving variant (gemma2): global layers fall back to
+        # the sliding window so 500k decode stays sub-quadratic.
+        eff_kind = kind
+        if long_window is not None and kind == ATTN_GLOBAL:
+            eff_kind = ATTN_LOCAL
+        h = apply_norm(cfg, p["ln1"], x)
+        h, kv = attention(p["attn"], h, cfg, eff_kind, positions,
+                          cache=None if cache is None else cache["kv"],
+                          impl=impl, kv_chunk=kv_chunk)
+        if cache is not None:
+            new_cache["kv"] = kv
+        x = x + h
+        if cross:
+            h = apply_norm(cfg, p["lnx"], x)
+            h, _ = attention(p["cross"], h, cfg, ATTN_GLOBAL, positions,
+                             cross_kv=cache["cross_kv"], impl=impl,
+                             kv_chunk=kv_chunk)
+            x = x + h
+        if "moe" in p:
+            h = apply_norm(cfg, p["ln2"], x)
+            h, aux_l = moe(p["moe"], h, cfg, mode=cfg_moe_mode(cfg))
+            aux = aux + cfg.moe.router_aux_loss * aux_l
+            x = x + h
+        elif "mlp" in p:
+            h = apply_norm(cfg, p["ln2"], x)
+            x = x + mlp(p["mlp"], h, cfg.mlp_type)
+    elif kind == BLOCK_RGLRU:
+        h = apply_norm(cfg, p["ln1"], x)
+        h, rec = rglru_block(p["rec"], h, cfg,
+                             state=None if cache is None else cache["rec"],
+                             impl=impl)
+        if cache is not None:
+            new_cache["rec"] = rec
+        x = x + h
+        h = apply_norm(cfg, p["ln2"], x)
+        x = x + mlp(p["mlp"], h, cfg.mlp_type)
+    elif kind == BLOCK_MLSTM:
+        h = apply_norm(cfg, p["ln1"], x)
+        h, st = xl.mlstm_block(p["cell"], h, cfg,
+                               state=None if cache is None else cache["cell"])
+        if cache is not None:
+            new_cache["cell"] = st
+        x = x + h
+    elif kind == BLOCK_SLSTM:
+        h = apply_norm(cfg, p["ln1"], x)
+        h, st = xl.slstm_block(p["cell"], h, cfg,
+                               state=None if cache is None else cache["cell"])
+        if cache is not None:
+            new_cache["cell"] = st
+        x = x + h
+    return x, new_cache, aux
+
+
+# module-level override (set by perf experiments); "dense" is paper-baseline
+_MOE_MODE = {"mode": "dense"}
+
+
+def set_moe_mode(mode: str):
+    _MOE_MODE["mode"] = mode
+
+
+def cfg_moe_mode(cfg) -> str:
+    return _MOE_MODE["mode"]
+
+
+# ---------------------------------------------------------------------------
+# Group structure
+# ---------------------------------------------------------------------------
+def _group_split(cfg: ModelConfig) -> Tuple[int, Tuple[str, ...]]:
+    """(num_full_groups, remainder_kinds)."""
+    plen = len(cfg.pattern)
+    g = cfg.num_layers // plen
+    rem = cfg.layer_kinds[g * plen:]
+    return g, rem
+
+
+# ---------------------------------------------------------------------------
+# Model init
+# ---------------------------------------------------------------------------
+def init_params(key, cfg: ModelConfig, dtype=jnp.float32):
+    ks = jax.random.split(key, 8)
+    vocab = cfg.padded_vocab_size
+    params: Dict[str, Any] = {
+        "embed": embed_init(ks[0], vocab, cfg.d_model, dtype),
+        "final_norm": init_norm(cfg, dtype=dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(ks[1], cfg.d_model, vocab, dtype)
+    if cfg.modality == "vision":
+        # llava projector: 2-layer MLP from CLIP width to d_model (trained)
+        k1, k2 = jax.random.split(ks[2])
+        params["frontend_proj"] = {
+            "w1": dense_init(k1, VISION_EMBED_DIM, cfg.d_model, dtype),
+            "w2": dense_init(k2, cfg.d_model, cfg.d_model, dtype),
+        }
+
+    cross = cfg.is_encdec
+    G, rem = _group_split(cfg)
+
+    def one_group(k):
+        kk = jax.random.split(k, len(cfg.pattern))
+        return [_init_layer(kk[i], cfg, kind, dtype, cross)
+                for i, kind in enumerate(cfg.pattern)]
+
+    if G > 0:
+        params["groups"] = jax.vmap(one_group)(jax.random.split(ks[3], G))
+    params["rem"] = [_init_layer(k, cfg, kind, dtype, cross)
+                     for k, kind in zip(jax.random.split(ks[4], max(len(rem), 1)), rem)]
+
+    if cfg.is_encdec:
+        enc_cfg = dataclasses.replace(cfg, num_layers=cfg.encoder_layers,
+                                      pattern=(ATTN_GLOBAL,))
+
+        def enc_group(k):
+            return [_init_layer(k, enc_cfg, ATTN_GLOBAL, dtype, False)]
+
+        params["encoder"] = {
+            "groups": jax.vmap(enc_group)(jax.random.split(ks[5], cfg.encoder_layers)),
+            "final_norm": init_norm(cfg, dtype=dtype),
+        }
+    return params
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.float32):
+    """Decode cache matching the group structure."""
+    cross = cfg.is_encdec
+    G, rem = _group_split(cfg)
+
+    def one(kind):
+        return _init_layer_cache(cfg, kind, batch, max_len, dtype, cross,
+                                 cfg.encoder_seq)
+
+    cache: Dict[str, Any] = {}
+    if G > 0:
+        group = [one(kind) for kind in cfg.pattern]
+        cache["groups"] = jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (G,) + x.shape).copy(), group)
+    cache["rem"] = [one(kind) for kind in rem]
+    return cache
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+def _embed_tokens(params, cfg, tokens):
+    x = params["embed"][tokens]
+    if cfg.scale_embed:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    return x
+
+
+def _run_layers(params, x, cfg, positions, cache, *, impl, kv_chunk, remat,
+                cross, decode, long_window):
+    """Scan the pattern groups, then the remainder. Returns (x, cache, aux)."""
+    G, rem = _group_split(cfg)
+    aux_total = jnp.zeros((), jnp.float32)
+
+    if G > 0:
+        has_cache = cache is not None
+
+        def body(carry, xs):
+            xc, aux = carry
+            # sequence-parallel residual (Megatron-SP): the scan carry -- the
+            # dominant saved activation for backward -- lives sharded over
+            # ('batch', 'model' on seq); attention/mlp gather what they need
+            # per layer. 16x smaller carries for +1 gather/reduce per layer.
+            xc = aconstrain(xc, ("batch", "model", None))
+            gp, gc = xs
+            new_gc = []
+            for i, kind in enumerate(cfg.pattern):
+                ci = gc[i] if has_cache else None
+                xc, nc, a = _apply_layer(
+                    gp[i], xc, cfg, kind, positions, ci, impl=impl,
+                    kv_chunk=kv_chunk, cross=cross, decode=decode,
+                    long_window=long_window)
+                new_gc.append(nc if has_cache else {})
+                aux = aux + a
+            xc = aconstrain(xc, ("batch", "model", None))
+            return (xc, aux), new_gc
+
+        if has_cache:
+            if remat:
+                body = jax.checkpoint(body)
+            (x, aux_total), new_gcache = jax.lax.scan(
+                body, (x, aux_total), (params["groups"], cache["groups"]))
+            cache = dict(cache)
+            cache["groups"] = new_gcache
+        else:
+            def body_nc(carry, gp):
+                none_cache = [None] * len(cfg.pattern)
+                new_carry, _ = body(carry, (gp, none_cache))
+                return new_carry, None
+
+            if remat:
+                body_nc = jax.checkpoint(body_nc)
+            (x, aux_total), _ = jax.lax.scan(body_nc, (x, aux_total),
+                                             params["groups"])
+
+    new_rem = []
+    for i, kind in enumerate(rem):
+        ci = cache["rem"][i] if cache is not None else None
+        x, nc, a = _apply_layer(params["rem"][i], x, cfg, kind, positions, ci,
+                                impl=impl, kv_chunk=kv_chunk, cross=cross,
+                                decode=decode, long_window=long_window)
+        new_rem.append(nc)
+        aux_total = aux_total + a
+    if cache is not None:
+        cache["rem"] = new_rem
+    return x, cache, aux_total
+
+
+def encode(params, cfg, frames, *, impl="jnp", kv_chunk=1024):
+    """Whisper encoder over (stubbed) frame embeddings [B, F, d]."""
+    enc = params["encoder"]
+    x = frames
+    pos = jnp.broadcast_to(jnp.arange(x.shape[1], dtype=jnp.int32)[None],
+                           x.shape[:2])
+
+    def body(carry, gp):
+        xc, _ = carry
+        h = apply_norm(cfg, gp[0]["ln1"], xc)
+        h, _ = attention(gp[0]["attn"], h, cfg, ATTN_GLOBAL, pos, impl=impl,
+                         kv_chunk=kv_chunk, causal=False)
+        xc = xc + h
+        h = apply_norm(cfg, gp[0]["ln2"], xc)
+        xc = xc + mlp(gp[0]["mlp"], h, cfg.mlp_type)
+        return (xc, 0.0), None
+
+    (x, _), _ = jax.lax.scan(body, (x, 0.0), enc["groups"])
+    return apply_norm(cfg, enc["final_norm"], x)
+
+
+def build_cross_kv(params, cfg, enc_out):
+    """Project encoder output into per-decoder-layer cross K/V."""
+    B, F, _ = enc_out.shape
+    pos = jnp.broadcast_to(jnp.arange(F, dtype=jnp.int32)[None], (B, F))
+
+    def one(layer_p):
+        k = (enc_out @ layer_p["cross"]["wk"]).reshape(B, F, cfg.num_kv_heads, cfg.head_dim)
+        v = (enc_out @ layer_p["cross"]["wv"]).reshape(B, F, cfg.num_kv_heads, cfg.head_dim)
+        return {"k": k, "v": v, "pos": pos}
+
+    G, rem = _group_split(cfg)
+    out = {}
+    if G > 0:
+        out["groups"] = [jax.vmap(one)(params["groups"][i])
+                         for i in range(len(cfg.pattern))]
+    out["rem"] = [one(params["rem"][i]) for i in range(len(rem))]
+    return out
+
+
+def forward(params, cfg: ModelConfig, batch: Dict[str, jnp.ndarray], *,
+            cache=None, impl: str = "jnp", kv_chunk: int = 1024,
+            remat: bool = False, long_window: Optional[int] = None,
+            logits_mode: str = "full"):
+    """Returns (logits_or_hidden, new_cache, aux).
+
+    batch keys: tokens [B,S]; optional positions [B,S];
+    vision: patch_embeds [B,P,1024]; audio: frames [B,F,d].
+    logits_mode: "full" -> [B,S,V] logits; "hidden" -> final hidden states.
+    """
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = aconstrain(_embed_tokens(params, cfg, tokens), ("batch", None, None))
+
+    n_front = 0
+    if cfg.modality == "vision" and "patch_embeds" in batch:
+        pe = batch["patch_embeds"]
+        fp = params["frontend_proj"]
+        pe = jax.nn.gelu(pe @ fp["w1"], approximate=True) @ fp["w2"]
+        x = jnp.concatenate([pe.astype(x.dtype), x], axis=1)
+        n_front = pe.shape[1]
+        S = S + n_front
+
+    if "positions" in batch:
+        positions = batch["positions"]
+        if n_front:
+            fpos = jnp.broadcast_to(jnp.arange(n_front, dtype=jnp.int32)[None],
+                                    (B, n_front))
+            positions = jnp.concatenate([fpos, positions + n_front], axis=1)
+    else:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+
+    cross = cfg.is_encdec
+    if cross and cache is None:
+        # training path: run encoder, build per-layer cross kv on the fly
+        enc_out = encode(params, cfg, batch["frames"], impl=impl,
+                         kv_chunk=kv_chunk)
+        cross_kv = build_cross_kv(params, cfg, enc_out)
+        cache = _attach_cross(cfg, cross_kv, batch=B,
+                              max_len=S, dtype=x.dtype, train=True)
+
+    x, cache, aux = _run_layers(params, x, cfg, positions, cache, impl=impl,
+                                kv_chunk=kv_chunk, remat=remat, cross=cross,
+                                decode=(S == 1), long_window=long_window)
+    x = apply_norm(cfg, params["final_norm"], x)
+    if n_front:
+        x = x[:, n_front:]
+    if logits_mode == "hidden":
+        return x, cache, aux
+    logits = unembed(params, cfg, x)
+    return logits, cache, aux
+
+
+def unembed(params, cfg, x):
+    if cfg.tie_embeddings:
+        logits = x @ params["embed"].T
+    else:
+        logits = x @ params["lm_head"]
+    logits = softcap(logits.astype(jnp.float32), cfg.final_softcap)
+    if cfg.padded_vocab_size != cfg.vocab_size:
+        pad_mask = jnp.arange(cfg.padded_vocab_size) >= cfg.vocab_size
+        logits = jnp.where(pad_mask, -1e9, logits)
+    return logits
+
+
+def _attach_cross(cfg, cross_kv, batch, max_len, dtype, train):
+    """Build a cache pytree that carries only cross_kv (training encdec) or
+    merge cross_kv into an existing decode cache."""
+    G, rem = _group_split(cfg)
+    cache: Dict[str, Any] = {}
+    if train:
+        # training: self-attn has no cache; represent each layer cache as
+        # {"kv": None-free dict}? -> run without self cache: we instead pass
+        # cache dicts containing only cross_kv and a fresh kv cache of S.
+        full = init_cache(cfg, batch, max_len, dtype)
+        if G > 0:
+            for i in range(len(cfg.pattern)):
+                full["groups"][i]["cross_kv"] = cross_kv["groups"][i]
+        for i in range(len(rem)):
+            full["rem"][i]["cross_kv"] = cross_kv["rem"][i]
+        return full
+    return cross_kv
+
+
+# ---------------------------------------------------------------------------
+# Loss (chunked-vocab cross entropy, never materializes [B,S,V] at once)
+# ---------------------------------------------------------------------------
+def chunked_xent(params, cfg, hidden, targets, mask, chunk: int = 256):
+    """hidden: [B,S,d]; targets,mask: [B,S]. Mean masked CE in fp32."""
+    B, S, d = hidden.shape
+    chunk = min(chunk, S)
+    pad = (-S) % chunk
+    if pad:
+        hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+        targets = jnp.pad(targets, ((0, 0), (0, pad)))
+        mask = jnp.pad(mask, ((0, 0), (0, pad)))
+    n = (S + pad) // chunk
+    hs = hidden.reshape(B, n, chunk, d).transpose(1, 0, 2, 3)
+    ts = targets.reshape(B, n, chunk).transpose(1, 0, 2)
+    ms = mask.reshape(B, n, chunk).transpose(1, 0, 2)
+
+    def body(carry, xs):
+        h, t, m = xs
+        logits = unembed(params, cfg, h)                 # [B,chunk,V] fp32
+        logits = aconstrain(logits, ("batch", None, "model"))
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, t[..., None], axis=-1)[..., 0]
+        loss = (lse - ll) * m
+        return (carry[0] + loss.sum(), carry[1] + m.sum()), None
+
+    # checkpoint: without it the backward saves every chunk's [B,chunk,V]
+    # fp32 logits (30 GiB/device at vocab 122k) — recompute one chunk instead
+    body = jax.checkpoint(body)
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.zeros((), jnp.float32),
+                                        jnp.zeros((), jnp.float32)),
+                                 (hs, ts, ms))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def loss_fn(params, cfg, batch, *, impl="jnp", kv_chunk=1024, remat=False):
+    hidden, _, aux = forward(params, cfg, batch, impl=impl, kv_chunk=kv_chunk,
+                             remat=remat, logits_mode="hidden")
+    mask = batch.get("mask")
+    if mask is None:
+        mask = jnp.ones_like(batch["targets"], jnp.float32)
+    ce = chunked_xent(params, cfg, hidden, batch["targets"], mask)
+    return ce + aux, {"ce": ce, "aux": aux}

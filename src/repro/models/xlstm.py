@@ -1,0 +1,262 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory) and sLSTM (scalar
+memory with hidden-to-hidden recurrence).
+
+mLSTM block (pre-LN residual):
+    x -> up-proj to 2*inner (branches u, z)
+    u -> causal conv -> q,k,v heads -> mLSTM cell -> per-head groupnorm
+    y = down-proj( cell_out * silu(z) )
+
+mLSTM cell with exponential gating + stabilizer m (paper eq. 19-27):
+    C_t = f' C_{t-1} + i' v k^T      n_t = f' n_{t-1} + i' k
+    h_t = C_t q / max(|n_t . q|, 1)
+    f' = exp(ftilde + m_{t-1} - m_t), i' = exp(itilde - m_t),
+    m_t = max(ftilde + m_{t-1}, itilde)
+
+Training/prefill runs the cell as a `lax.scan` over time (exact recurrent
+form — the paper-faithful baseline; a chunkwise-parallel variant is a §Perf
+item). Decode is the one-step update. sLSTM cannot be parallelized over time
+(nonlinear h->h recurrence) and always scans.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.autoshard import aconstrain
+from repro.models.layers import (causal_conv1d, dense_init, init_conv1d,
+                                 init_layernorm, layernorm)
+
+
+def _inner(cfg):
+    return int(cfg.d_model * cfg.proj_factor)
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+def init_mlstm(key, cfg, dtype=jnp.float32):
+    d = cfg.d_model
+    inner = _inner(cfg)
+    h = cfg.num_heads
+    hd = inner // h
+    ks = jax.random.split(key, 9)
+    return {
+        "w_up": dense_init(ks[0], d, inner, dtype),
+        "w_z": dense_init(ks[1], d, inner, dtype),
+        "conv": init_conv1d(ks[2], inner, cfg.conv_kernel, dtype),
+        "wq": dense_init(ks[3], inner, inner, dtype),
+        "wk": dense_init(ks[4], inner, inner, dtype),
+        "wv": dense_init(ks[5], inner, inner, dtype),
+        # gates are per-head scalars computed from the conv'd branch
+        "w_if": dense_init(ks[6], inner, 2 * h, dtype),
+        "b_if": jnp.concatenate([jnp.zeros((h,)), jnp.linspace(3.0, 6.0, h)]).astype(dtype),
+        "norm": init_layernorm(hd, dtype),
+        "w_down": dense_init(ks[7], inner, d, dtype),
+    }
+
+
+def _mlstm_cell_step(carry, xs):
+    """carry: (C [B,h,hd,hd], n [B,h,hd], m [B,h]); xs: per-step tensors."""
+    C, n, m = carry
+    q, k, v, it, ft = xs                   # q,k,v: [B,h,hd]; it,ft: [B,h]
+    m_new = jnp.maximum(ft + m, it)
+    fp = jnp.exp(ft + m - m_new)[..., None]           # [B,h,1]
+    ip = jnp.exp(it - m_new)[..., None]
+    C = fp[..., None] * C + ip[..., None] * (v[..., :, None] * k[..., None, :])
+    n = fp * n + ip * k
+    num = jnp.einsum("bhij,bhj->bhi", C, q)
+    # stabilized normalizer max(|n.q|, exp(-m)) == unstabilized max(|n*.q|, 1)
+    # — exactly matches the chunkwise-parallel form in mlstm_seq
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhi,bhi->bh", n, q)),
+                      jnp.exp(-m_new))[..., None]
+    h_out = num / den
+    return (C, n, m_new), h_out
+
+
+def mlstm_seq(q, k, v, it, ft, state, chunk: int = 256):
+    """Chunkwise-parallel mLSTM (TPU-native adaptation, DESIGN.md §3):
+
+    A per-timestep scan of the matrix memory C [B,h,hd,hd] is exact but
+    stores C at every step for BPTT (TB-scale at 4k context). Instead the
+    sequence is split into chunks; the (C, n, m) state crosses chunk
+    boundaries and *within* a chunk the output is the stabilized quadratic
+    form — dense [chunk x chunk] matmuls that run on the MXU and need no
+    per-step state. Exactly equal to the recurrent cell (tests assert it).
+
+    q/k/v: [B,S,h,hd] (q,k pre-scaled); it/ft: [B,S,h] fp32 (ft = log f).
+    Returns (h [B,S,h,hd], (C,n,m) final state).
+    """
+    B, S, H, hd = q.shape
+    chunk = min(chunk, S)
+    pad = (-S) % chunk
+    if pad:
+        z4 = ((0, 0), (0, pad), (0, 0), (0, 0))
+        z3 = ((0, 0), (0, pad), (0, 0))
+        q, k, v = (jnp.pad(a, z4) for a in (q, k, v))
+        # padded steps: f = 1 (log f = 0), i = -inf -> state passes through
+        it = jnp.pad(it, z3, constant_values=-1e30)
+        ft = jnp.pad(ft, z3, constant_values=0.0)
+    n_ch = (S + pad) // chunk
+
+    def to_chunks(a):
+        return a.reshape(B, n_ch, chunk, *a.shape[2:]).swapaxes(0, 1)
+
+    qc, kc, vc, ic, fc = map(to_chunks, (q, k, v, it, ft))
+
+    def chunk_body(carry, xs):
+        C_in, n_in, m_in = carry                       # [B,H,hd,hd], [B,H,hd], [B,H]
+        q_i, k_i, v_i, i_i, f_i = xs                   # [B,c,H,hd], [B,c,H]
+        F = jnp.cumsum(f_i, axis=1)                    # [B,c,H] inclusive logf sums
+        c_s = i_i - F                                  # i_s - F_s
+        m_loc = jax.lax.cummax(c_s, axis=1)
+        m_t = F + jnp.maximum(m_in[:, None], m_loc)    # running max per step
+        # intra-chunk stabilized decay: d_ts = exp(F_t - F_s + i_s - m_t)
+        logd = (F[:, :, None] - F[:, None, :] + i_i[:, None, :]
+                - m_t[:, :, None])                     # [B,t,s,H]
+        tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+        logd = jnp.where(tri[None, :, :, None], logd, -jnp.inf)
+        d = jnp.exp(logd)
+        # inter-chunk scale: e_t = exp(F_t + m_in - m_t)
+        e_t = jnp.exp(F + m_in[:, None] - m_t)         # [B,c,H]
+
+        s_qk = jnp.einsum("bthd,bshd->bhts", q_i, k_i)  # [B,H,t,s]
+        w = s_qk * d.transpose(0, 3, 1, 2)
+        intra_num = jnp.einsum("bhts,bshd->bthd", w, v_i)
+        intra_den = jnp.sum(w, axis=-1).transpose(0, 2, 1)        # [B,c,H]
+        inter_num = jnp.einsum("bhij,bthj->bthi", C_in, q_i) * e_t[..., None]
+        inter_den = jnp.einsum("bhj,bthj->bth", n_in, q_i) * e_t
+        den = jnp.maximum(jnp.abs(inter_den + intra_den), jnp.exp(-m_t))
+        h = (inter_num + intra_num) / den[..., None]   # [B,c,H,hd]
+
+        # chunk-end state (stabilized at m_out = m_t[last])
+        m_out = m_t[:, -1]
+        g_s = jnp.exp(F[:, -1:, :] - F + i_i - m_out[:, None])   # [B,c,H]
+        C_out = (jnp.exp(F[:, -1] + m_in - m_out)[..., None, None] * C_in
+                 + jnp.einsum("bsh,bshd,bshe->bhde", g_s, v_i, k_i))
+        n_out = (jnp.exp(F[:, -1] + m_in - m_out)[..., None] * n_in
+                 + jnp.einsum("bsh,bshd->bhd", g_s, k_i))
+        return (C_out, n_out, m_out), h
+
+    body = jax.checkpoint(chunk_body)
+    (C, n, m), hs = jax.lax.scan(body, state, (qc, kc, vc, ic, fc))
+    hs = hs.swapaxes(0, 1).reshape(B, S + pad, H, hd)
+    return hs[:, :S], (C, n, m)
+
+
+def mlstm_block(p, x, cfg, state=None):
+    """x: [B,S,d] -> (y, new_state). state: (C, n, m, conv) or None."""
+    B, S, _ = x.shape
+    inner = _inner(cfg)
+    h = cfg.num_heads
+    hd = p["norm"]["scale"].shape[0]
+    u = aconstrain(x @ p["w_up"], ("batch", None, "model"))
+    z = aconstrain(x @ p["w_z"], ("batch", None, "model"))
+    conv_state = None if state is None else state[3]
+    uc, new_conv = causal_conv1d(p["conv"], jax.nn.silu(u), conv_state)
+
+    q = (uc @ p["wq"]).reshape(B, S, h, hd).astype(jnp.float32) * (hd ** -0.5)
+    k = (uc @ p["wk"]).reshape(B, S, h, hd).astype(jnp.float32) * (hd ** -0.5)
+    v = (u @ p["wv"]).reshape(B, S, h, hd).astype(jnp.float32)
+    gates = (uc @ p["w_if"]).astype(jnp.float32) + p["b_if"].astype(jnp.float32)
+    it, ft = gates[..., :h], jax.nn.log_sigmoid(gates[..., h:])
+
+    if state is None:
+        C0 = jnp.zeros((B, h, hd, hd), jnp.float32)
+        n0 = jnp.zeros((B, h, hd), jnp.float32)
+        m0 = jnp.zeros((B, h), jnp.float32)
+        cell_state = (C0, n0, m0)
+    else:
+        cell_state = (state[0], state[1], state[2])
+
+    if S == 1 and state is not None:
+        (C, n, m), h_out = _mlstm_cell_step(
+            cell_state, (q[:, 0], k[:, 0], v[:, 0], it[:, 0], ft[:, 0]))
+        hs = h_out[:, None]
+    else:
+        hs, (C, n, m) = mlstm_seq(q, k, v, it, ft, cell_state)
+
+    hs = layernorm(p["norm"], hs)                     # per-head groupnorm
+    y = (hs.reshape(B, S, inner).astype(x.dtype) * jax.nn.silu(z)) @ p["w_down"]
+    return y, (C, n, m, new_conv)
+
+
+def init_mlstm_state(cfg, batch: int, dtype=jnp.float32):
+    inner = _inner(cfg)
+    h = cfg.num_heads
+    hd = inner // h
+    return (jnp.zeros((batch, h, hd, hd), jnp.float32),
+            jnp.zeros((batch, h, hd), jnp.float32),
+            jnp.zeros((batch, h), jnp.float32),
+            jnp.zeros((batch, cfg.conv_kernel - 1, inner), dtype))
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+def init_slstm(key, cfg, dtype=jnp.float32):
+    d = cfg.d_model
+    inner = _inner(cfg)
+    h = cfg.num_heads
+    hd = inner // h
+    ks = jax.random.split(key, 4)
+    # input projections for (z, i, f, o) and block-diagonal recurrent mats
+    return {
+        "w_in": dense_init(ks[0], d, 4 * inner, dtype),
+        "r": (jax.random.normal(ks[1], (4, h, hd, hd)) * (hd ** -0.5)).astype(dtype),
+        "b": jnp.concatenate(
+            [jnp.zeros((2 * inner,)), jnp.linspace(3.0, 6.0, inner),
+             jnp.zeros((inner,))]).astype(dtype),
+        "norm": init_layernorm(inner, dtype),
+        "w_down": dense_init(ks[2], inner, d, dtype),
+    }
+
+
+def _slstm_step(p, carry, x_t):
+    """carry: (c, n, m, h) each [B, inner] fp32; x_t: [B, 4*inner]."""
+    c, n, m, h = carry
+    B = c.shape[0]
+    nh = p["r"].shape[1]
+    hd = p["r"].shape[-1]
+    hr = h.reshape(B, nh, hd)
+    rec = jnp.einsum("ghij,bhj->gbhi", p["r"].astype(jnp.float32), hr)
+    rec = rec.reshape(4, B, nh * hd)
+    pre = x_t.astype(jnp.float32) + p["b"].astype(jnp.float32)
+    zt, it, ft, ot = jnp.split(pre, 4, axis=-1)
+    zt = jnp.tanh(zt + rec[0])
+    it = it + rec[1]
+    ft = jax.nn.log_sigmoid(ft + rec[2])
+    ot = jax.nn.sigmoid(ot + rec[3])
+    m_new = jnp.maximum(ft + m, it)
+    ip = jnp.exp(it - m_new)
+    fp = jnp.exp(ft + m - m_new)
+    c = fp * c + ip * zt
+    n = fp * n + ip
+    h_new = ot * c / jnp.maximum(n, 1.0)
+    return (c, n, m_new, h_new), h_new
+
+
+def slstm_block(p, x, cfg, state=None):
+    """x: [B,S,d] -> (y, new_state)."""
+    B, S, _ = x.shape
+    inner = _inner(cfg)
+    xin = aconstrain(x @ p["w_in"], ("batch", None, "model"))
+    if state is None:
+        z = jnp.zeros((B, inner), jnp.float32)
+        state = (z, z, z, z)
+    if S == 1:
+        new_state, h = _slstm_step(p, state, xin[:, 0])
+        hs = h[:, None]
+    else:
+        def step(carry, x_t):
+            return _slstm_step(p, carry, x_t)
+        new_state, hs = jax.lax.scan(step, state, xin.transpose(1, 0, 2))
+        hs = hs.transpose(1, 0, 2)
+    hs = layernorm(p["norm"], hs).astype(x.dtype)
+    y = hs @ p["w_down"]
+    return y, new_state
+
+
+def init_slstm_state(cfg, batch: int, dtype=jnp.float32):
+    inner = _inner(cfg)
+    z = jnp.zeros((batch, inner), jnp.float32)
+    return (z, z, z, z)

@@ -1,0 +1,2 @@
+from repro.optim.optimizers import adamw, sgd, momentum, Optimizer, make_optimizer
+from repro.optim.schedules import cosine_schedule, wsd_schedule, constant_schedule

@@ -1,0 +1,99 @@
+"""Minimal optimizer library (optax-style pure functions, no dependency).
+
+Each optimizer is an `Optimizer(init, update)` pair operating on pytrees.
+`update` returns (new_params, new_state). LR is a schedule function of the
+int step (kept inside the state).
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable
+    update: Callable
+
+
+def _tree_zeros(params, dtype=None):
+    return jax.tree.map(lambda p: jnp.zeros_like(p, dtype=dtype or p.dtype), params)
+
+
+def sgd(schedule):
+    def init(params):
+        return {"step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        lr = schedule(state["step"])
+        new = jax.tree.map(lambda p, g: p - lr.astype(p.dtype) * g.astype(p.dtype),
+                           params, grads)
+        return new, {"step": state["step"] + 1}
+
+    return Optimizer(init, update)
+
+
+def momentum(schedule, beta: float = 0.9):
+    def init(params):
+        return {"step": jnp.zeros((), jnp.int32),
+                "m": _tree_zeros(params, jnp.float32)}
+
+    def update(grads, state, params):
+        lr = schedule(state["step"])
+        m = jax.tree.map(lambda m_, g: beta * m_ + g.astype(jnp.float32),
+                         state["m"], grads)
+        new = jax.tree.map(lambda p, m_: p - (lr * m_).astype(p.dtype), params, m)
+        return new, {"step": state["step"] + 1, "m": m}
+
+    return Optimizer(init, update)
+
+
+def adamw(schedule, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+          weight_decay: float = 0.0):
+    def init(params):
+        return {"step": jnp.zeros((), jnp.int32),
+                "m": _tree_zeros(params, jnp.float32),
+                "v": _tree_zeros(params, jnp.float32)}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        lr = schedule(state["step"])
+        m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32),
+                         state["m"], grads)
+        v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+                         state["v"], grads)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(p, m_, v_):
+            u = (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps)
+            if weight_decay:
+                u = u + weight_decay * p.astype(jnp.float32)
+            return p - (lr * u).astype(p.dtype)
+
+        new = jax.tree.map(upd, params, m, v)
+        return new, {"step": step, "m": m, "v": v}
+
+    return Optimizer(init, update)
+
+
+def make_optimizer(name: str, schedule, **kw) -> Optimizer:
+    if name == "adamw":
+        return adamw(schedule, **kw)
+    if name == "momentum":
+        return momentum(schedule, **kw)
+    if name == "sgd":
+        return sgd(schedule)
+    raise ValueError(name)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(jax.tree.map(lambda g: jnp.sum(jnp.square(g.astype(jnp.float32))), tree))
+    return jnp.sqrt(sum(leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), gn

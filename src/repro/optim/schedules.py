@@ -1,0 +1,48 @@
+"""LR schedules: cosine (default) and WSD (Warmup-Stable-Decay, MiniCPM's
+signature schedule, arXiv:2404.06395 §4)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant_schedule(lr: float):
+    def f(step):
+        return jnp.asarray(lr, jnp.float32)
+    return f
+
+
+def cosine_schedule(lr: float, total_steps: int, warmup: int = 0,
+                    final_frac: float = 0.1):
+    def f(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = lr * step / jnp.maximum(warmup, 1)
+        t = (step - warmup) / jnp.maximum(total_steps - warmup, 1)
+        t = jnp.clip(t, 0.0, 1.0)
+        cos = final_frac * lr + (1 - final_frac) * lr * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return jnp.where(step < warmup, warm, cos)
+    return f
+
+
+def wsd_schedule(lr: float, total_steps: int, warmup: int = 0,
+                 decay_frac: float = 0.1, final_frac: float = 0.01):
+    """Warmup -> Stable (constant lr) -> Decay (last decay_frac of steps,
+    exponential-style anneal to final_frac*lr)."""
+    decay_start = int(total_steps * (1 - decay_frac))
+
+    def f(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = lr * step / jnp.maximum(warmup, 1)
+        t = (step - decay_start) / jnp.maximum(total_steps - decay_start, 1)
+        t = jnp.clip(t, 0.0, 1.0)
+        decay = lr * (final_frac ** t)
+        out = jnp.where(step < decay_start, lr, decay)
+        return jnp.where(step < warmup, warm, out)
+    return f
+
+
+def get_schedule(name: str, lr: float, total_steps: int, warmup: int = 0):
+    if name == "wsd":
+        return wsd_schedule(lr, total_steps, warmup)
+    if name == "cosine":
+        return cosine_schedule(lr, total_steps, warmup)
+    return constant_schedule(lr)

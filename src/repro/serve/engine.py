@@ -1,0 +1,124 @@
+"""Continuous-batching serving engine over the model zoo's serve_step.
+
+Production pattern (vLLM-style, sized for the assigned decode shapes):
+
+* fixed-size slot table — B concurrent sequences, each slot owning one lane
+  of the batched KV cache / recurrent state (slot i == batch row i);
+* admission: waiting requests claim free slots; their prompt is prefilled
+  into the slot's cache lane via a single-lane prefill, then merged;
+* one `decode_step` per engine tick advances EVERY active slot (the
+  decode_32k / long_500k dry-run shape: one token against the shared
+  cache);
+* completion: slots free on EOS-length and are immediately reusable —
+  requests of different lengths stream through without a global barrier.
+
+The cache merge uses index-surgery on the cache pytree: every leaf's batch
+dim is row-assigned. Works for all cache families (KV ring buffers,
+RG-LRU / xLSTM recurrent states) because init_cache fixes the batch dim
+position per leaf kind.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import api
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                  # [P] int32
+    max_new_tokens: int = 16
+    out: List[int] = field(default_factory=list)
+    done: bool = False
+
+
+def _merge_lane(cache, lane_cache, row: int):
+    """Copy lane 0 of `lane_cache` into batch row `row` of `cache`."""
+    def merge(dst, src):
+        if dst.ndim == 0 or dst.shape == src.shape and dst.ndim == 0:
+            return src
+        # find the batch dim: first dim where dst is engine-batch-sized and
+        # src is 1 (single-lane prefill). Caches built by init_cache keep
+        # the batch dim at the same index for dst/src.
+        for d in range(dst.ndim):
+            if src.shape[d] == 1 and dst.shape[d] != 1:
+                idx = [slice(None)] * dst.ndim
+                idx[d] = row
+                src_idx = [slice(None)] * src.ndim
+                src_idx[d] = 0
+                return dst.at[tuple(idx)].set(src[tuple(src_idx)])
+        return src if dst.shape == src.shape else dst
+    return jax.tree.map(merge, cache, lane_cache)
+
+
+class ServeEngine:
+    def __init__(self, cfg, params, *, slots: int = 4, max_len: int = 512,
+                 impl: str = "jnp", dtype=jnp.float32):
+        self.cfg = cfg
+        self.params = params
+        self.slots = slots
+        self.max_len = max_len
+        self.cache = api.init_cache(cfg, slots, max_len, dtype)
+        self._prefill = jax.jit(api.make_prefill_step(cfg, impl=impl))
+        self._decode = jax.jit(api.make_decode_step(cfg, impl=impl))
+        self.active: Dict[int, Request] = {}      # slot -> request
+        self.positions = np.zeros(slots, np.int64)
+        self.last_tok = np.zeros(slots, np.int64)
+        self.waiting: List[Request] = []
+        self._lane_cache_template = api.init_cache(cfg, 1, max_len, dtype)
+
+    # ------------------------------------------------------------------
+    def submit(self, req: Request):
+        self.waiting.append(req)
+
+    def _admit(self):
+        free = [s for s in range(self.slots) if s not in self.active]
+        while free and self.waiting:
+            slot = free.pop(0)
+            req = self.waiting.pop(0)
+            lane = jax.tree.map(jnp.copy, self._lane_cache_template)
+            toks = jnp.asarray(req.prompt, jnp.int32)[None]
+            logits, lane = self._prefill(self.params, lane, {"tokens": toks})
+            self.cache = _merge_lane(self.cache, lane, slot)
+            tok = int(jnp.argmax(logits[0]))
+            req.out.append(tok)
+            self.active[slot] = req
+            self.positions[slot] = len(req.prompt)
+            self.last_tok[slot] = tok
+
+    # ------------------------------------------------------------------
+    def step(self):
+        """One engine tick: admit, decode every active slot, retire."""
+        self._admit()
+        if not self.active:
+            return []
+        toks = jnp.asarray(self.last_tok, jnp.int32)[:, None]
+        pos = jnp.asarray(self.positions, jnp.int32)[:, None]
+        logits, self.cache = self._decode(self.params, self.cache, toks, pos)
+        nxt = np.asarray(jnp.argmax(logits, -1))
+        finished = []
+        for slot, req in list(self.active.items()):
+            tok = int(nxt[slot])
+            req.out.append(tok)
+            self.positions[slot] += 1
+            self.last_tok[slot] = tok
+            if (len(req.out) >= req.max_new_tokens
+                    or self.positions[slot] >= self.max_len - 1):
+                req.done = True
+                finished.append(req)
+                del self.active[slot]
+        return finished
+
+    def run(self, max_ticks: int = 1000) -> List[Request]:
+        done: List[Request] = []
+        for _ in range(max_ticks):
+            done += self.step()
+            if not self.active and not self.waiting:
+                break
+        return done

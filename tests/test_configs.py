@@ -1,0 +1,87 @@
+"""Assigned-architecture configs: exact sizes from the assignment table."""
+import pytest
+
+from repro.configs import get_config, list_archs, INPUT_SHAPES
+
+ASSIGNED = {
+    #                    L    d     H   kv  d_ff    vocab
+    "minicpm-2b":        (40, 2304, 36, 36, 5760, 122753),
+    "llava-next-mistral-7b": (32, 4096, 32, 8, 14336, 32000),
+    "gemma2-9b":         (42, 3584, 16, 8, 14336, 256000),
+    "whisper-tiny":      (4, 384, 6, 6, 1536, 51865),
+    "grok-1-314b":       (64, 6144, 48, 8, 32768, 131072),
+    "gemma-2b":          (18, 2048, 8, 1, 16384, 256000),
+    "xlstm-1.3b":        (48, 2048, 4, 4, 0, 50304),
+    "recurrentgemma-9b": (38, 4096, 16, 1, 12288, 256000),
+    "qwen1.5-0.5b":      (24, 1024, 16, 16, 2816, 151936),
+    "olmoe-1b-7b":       (16, 2048, 16, 16, 1024, 50304),
+}
+
+
+def test_all_archs_listed():
+    assert sorted(list_archs()) == sorted(ASSIGNED)
+
+
+@pytest.mark.parametrize("arch", sorted(ASSIGNED))
+def test_assigned_sizes(arch):
+    cfg = get_config(arch)
+    L, d, H, kv, dff, vocab = ASSIGNED[arch]
+    assert cfg.num_layers == L
+    assert cfg.d_model == d
+    assert cfg.num_heads == H
+    assert cfg.num_kv_heads == kv
+    assert cfg.d_ff == dff
+    assert cfg.vocab_size == vocab
+    assert cfg.citation
+
+
+def test_moe_configs():
+    grok = get_config("grok-1-314b")
+    assert grok.moe.num_experts == 8 and grok.moe.experts_per_token == 2
+    olmoe = get_config("olmoe-1b-7b")
+    assert olmoe.moe.num_experts == 64 and olmoe.moe.experts_per_token == 8
+
+
+def test_special_features():
+    assert get_config("qwen1.5-0.5b").qkv_bias
+    assert get_config("gemma2-9b").attn_softcap == 50.0
+    assert get_config("gemma2-9b").pattern == ("local", "global")
+    assert get_config("gemma-2b").num_kv_heads == 1            # MQA
+    assert get_config("minicpm-2b").schedule == "wsd"
+    assert get_config("whisper-tiny").encoder_layers == 4
+    assert get_config("llava-next-mistral-7b").frontend_tokens == 2880
+    assert get_config("recurrentgemma-9b").pattern == ("rglru", "rglru", "local")
+
+
+def test_input_shapes():
+    assert INPUT_SHAPES["train_4k"].seq_len == 4096
+    assert INPUT_SHAPES["train_4k"].global_batch == 256
+    assert INPUT_SHAPES["prefill_32k"].seq_len == 32768
+    assert INPUT_SHAPES["prefill_32k"].global_batch == 32
+    assert INPUT_SHAPES["decode_32k"].global_batch == 128
+    assert INPUT_SHAPES["long_500k"].seq_len == 524288
+    assert INPUT_SHAPES["long_500k"].global_batch == 1
+
+
+@pytest.mark.parametrize("arch", sorted(ASSIGNED))
+def test_reduced_variants(arch):
+    cfg = get_config(arch).reduced()
+    assert cfg.d_model <= 512
+    assert cfg.num_layers <= 4
+    if cfg.moe is not None:
+        assert cfg.moe.num_experts <= 4
+    # reduced keeps every distinct block kind of the family
+    assert set(cfg.pattern) == set(get_config(arch).pattern)
+
+
+@pytest.mark.parametrize("arch", sorted(ASSIGNED))
+def test_param_counts_sane(arch):
+    cfg = get_config(arch)
+    n = cfg.param_count()
+    expected = {"minicpm-2b": 2.7e9, "llava-next-mistral-7b": 7.3e9,
+                "gemma2-9b": 9.2e9, "whisper-tiny": 39e6,
+                "grok-1-314b": 314e9, "gemma-2b": 2.5e9,
+                "xlstm-1.3b": 1.3e9, "recurrentgemma-9b": 9.0e9,
+                "qwen1.5-0.5b": 0.46e9, "olmoe-1b-7b": 6.9e9}[arch]
+    assert 0.5 * expected < n < 2.0 * expected, (arch, n, expected)
+    assert cfg.active_param_count() <= n

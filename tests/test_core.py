@@ -1,0 +1,234 @@
+"""Paper-math unit tests: EMD policy (eq. 3-4), Theorem 1, mobility
+(eq. 24-27), OFDMA (eq. 9-11), GPU model (eq. 6-8), SUBP1-4 and the joint
+two-scale algorithm (Alg. 1-3)."""
+import numpy as np
+import pytest
+
+from repro.configs.base import GenFVConfig
+from repro.core import bandwidth as bw
+from repro.core import channel, convergence, emd, generation, gpu_model
+from repro.core import mobility, power as pw
+from repro.core.selection import select, select_no_emd, select_random
+from repro.core.two_scale import plan_round
+
+CFG = GenFVConfig()
+
+
+# ---------------------------------------------------------------------------
+# EMD + weighted policy
+# ---------------------------------------------------------------------------
+def test_emd_iid_is_zero():
+    assert emd.emd(np.full(10, 0.1)) == pytest.approx(0.0)
+
+
+def test_emd_single_class():
+    p = np.zeros(10)
+    p[3] = 1.0
+    assert emd.emd(p) == pytest.approx(1.8)      # 2*(Y-1)/Y
+
+
+def test_kappas_match_eq4():
+    k1, k2 = emd.kappas(1.0)
+    assert k2 == pytest.approx(0.25) and k1 == pytest.approx(0.75)
+    k1, k2 = emd.kappas(0.0)
+    assert (k1, k2) == (1.0, 0.0)
+
+
+def test_aggregate_eq4_manual():
+    import jax.numpy as jnp
+    m1 = {"w": jnp.array([1.0, 2.0])}
+    m2 = {"w": jnp.array([3.0, 4.0])}
+    aug = {"w": jnp.array([10.0, 10.0])}
+    emd_bar = 1.0                                 # k2 = 0.25
+    out = emd.aggregate([m1, m2], [0.5, 0.5], aug, emd_bar)
+    expect = 0.75 * np.array([2.0, 3.0]) + 0.25 * np.array([10.0, 10.0])
+    np.testing.assert_allclose(np.asarray(out["w"]), expect, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Theorem 1
+# ---------------------------------------------------------------------------
+def test_convergence_bound_contracts():
+    p = convergence.ConvergenceParams()
+    assert convergence.chi(p) < 1.0
+    rhos, lams = [0.5, 0.5], [0.1, 0.2]
+    b = convergence.bound_curve(p, 50, rhos, lams, 0.8, 0.2)
+    assert b[0] == pytest.approx(p.theta)
+    assert np.all(np.diff(b) <= 1e-9)            # monotone toward the floor
+    floor = convergence.psi(p) * convergence.big_lambda(p, rhos, lams, 0.8, 0.2)
+    asymptote = convergence.bound(p, 3000, rhos, lams, 0.8, 0.2)
+    assert asymptote == pytest.approx(floor, rel=1e-2)
+    assert b[-1] >= floor - 1e-9
+
+
+def test_convergence_worse_data_bigger_bound():
+    p = convergence.ConvergenceParams()
+    good = convergence.bound(p, 30, [1.0], [0.05], 0.9, 0.1)
+    bad = convergence.bound(p, 30, [1.0], [0.50], 0.9, 0.1)
+    assert bad > good
+
+
+def test_convergence_requires_small_eta():
+    p = convergence.ConvergenceParams(eta=0.2, varrho=10.0)
+    with pytest.raises(AssertionError):
+        convergence.bound(p, 10, [1.0], [0.1], 0.9, 0.1)
+
+
+# ---------------------------------------------------------------------------
+# Mobility (eq. 24-27)
+# ---------------------------------------------------------------------------
+def test_average_speed_congestion():
+    free = mobility.average_speed(CFG, 0)
+    jam = mobility.average_speed(CFG, CFG.m_max)
+    assert free == CFG.v_max and jam == CFG.v_min
+
+
+def test_holding_time_geometry():
+    half = mobility.coverage_half_length(CFG)
+    # vehicle at the entry edge moving forward crosses the whole chord
+    t_full = mobility.holding_time(CFG, -half, 60.0)
+    t_half = mobility.holding_time(CFG, 0.0, 60.0)
+    assert t_full == pytest.approx(2 * t_half, rel=1e-6)
+    # about to leave -> ~0
+    assert mobility.holding_time(CFG, half, 60.0) == pytest.approx(0.0)
+
+
+# ---------------------------------------------------------------------------
+# Channel + GPU models
+# ---------------------------------------------------------------------------
+def test_uplink_rate_monotonic():
+    r1 = channel.uplink_rate(CFG, 1.0, 0.5, 200.0)
+    r2 = channel.uplink_rate(CFG, 1.0, 1.0, 200.0)    # more power
+    r3 = channel.uplink_rate(CFG, 2.0, 0.5, 200.0)    # more bandwidth
+    r4 = channel.uplink_rate(CFG, 1.0, 0.5, 400.0)    # farther
+    assert r2 > r1 and r3 > r1 and r4 < r1
+    assert r3 == pytest.approx(2 * r1)               # rate linear in l_n
+
+
+def test_gpu_energy_eq8():
+    v = mobility.Vehicle(0, 0.0, 50.0, 1.0, 1.5e9, 1.3e9, 1.0, 1000,
+                         np.full(10, .1), 0.0)
+    t = gpu_model.train_time(v, 8)
+    p = gpu_model.runtime_power(v)
+    assert gpu_model.train_energy(v, 8) == pytest.approx(p * t)
+    assert gpu_model.train_time(v, 16) > t           # more batches -> slower
+
+
+# ---------------------------------------------------------------------------
+# SUBP2 bandwidth (Alg. 1)
+# ---------------------------------------------------------------------------
+def test_bandwidth_respects_budget_and_helps_stragglers():
+    A = np.array([0.5, 0.5, 0.5])
+    B = np.array([1.0, 2.0, 4.0])        # third vehicle has worst channel
+    C = np.zeros(3)
+    D = 0.5 * B
+    res = bw.solve_bandwidth(A, B, C, D, M=6.0, e_bar=10.0)
+    assert res.l.sum() <= 6.0 + 1e-6
+    assert res.l[2] > res.l[1] > res.l[0]            # worse channel -> more l
+    # min-max delay below the equal-share baseline
+    eq = float(np.max(A + B / bw.equal_share(3, 6.0)))
+    assert res.t_bar <= eq + 1e-6
+
+
+# ---------------------------------------------------------------------------
+# SUBP3 power (Alg. 2)
+# ---------------------------------------------------------------------------
+def test_power_sca_hits_max_when_energy_slack():
+    l_w = np.full(3, 2e7)
+    b_prime = np.full(3, 1e4)
+    G = np.zeros(3)
+    res = pw.solve_power(1e8, l_w, b_prime, G, e_bar=100.0, phi_min=0.1,
+                         phi_max=1.0)
+    np.testing.assert_allclose(res.phi, 1.0, atol=1e-3)   # delay-optimal
+    assert res.converged
+
+
+def test_power_sca_respects_energy():
+    l_w = np.full(2, 1e7)
+    b_prime = np.full(2, 1e3)
+    G = np.array([0.0, 0.0])
+    e_bar = 2.0
+    res = pw.solve_power(3e8, l_w, b_prime, G, e_bar, 0.05, 1.0)
+    e = pw.e_of_phi(3e8, l_w, b_prime, res.phi) + G
+    assert np.all(e <= e_bar * 1.05)
+    # delay decreases with power within the feasible set
+    t = pw.t_of_phi(3e8, l_w, b_prime, res.phi)
+    t_min = pw.t_of_phi(3e8, l_w, b_prime, np.full(2, 0.05))
+    assert np.all(t <= t_min)
+
+
+# ---------------------------------------------------------------------------
+# SUBP4 generation (eq. 48)
+# ---------------------------------------------------------------------------
+def test_generation_closed_form():
+    svc = generation.DiffusionService()
+    b = generation.optimal_generation(t_bar=2.0, b_prev=0, svc=svc)
+    assert b == int(np.floor((2.0 - gpu_model.rsu_train_time(1)) / svc.t_per_image))
+    assert generation.optimal_generation(0.001, 0, svc) == 0
+
+
+def test_label_schedule_uniform():
+    counts = generation.label_schedule(103, 10)
+    assert counts.sum() == 103
+    assert counts.max() - counts.min() <= 1
+
+
+# ---------------------------------------------------------------------------
+# SUBP1 + Algorithm 3
+# ---------------------------------------------------------------------------
+def _fleet(rng, n=30, alpha=0.3):
+    hists = rng.dirichlet(np.full(10, alpha), size=n)
+    sizes = rng.integers(500, 2000, size=n)
+    return mobility.sample_fleet(rng, CFG, hists, sizes)
+
+
+def test_selection_emd_threshold(rng):
+    fleet = _fleet(rng)
+    res = select(CFG, fleet, model_bits=1e6, batches=4, emd_hat=0.8)
+    for v, a in zip(fleet, res.alpha):
+        if v.emd > 0.8:
+            assert a == 0
+    loose = select(CFG, fleet, model_bits=1e6, batches=4, emd_hat=10.0)
+    assert loose.alpha.sum() >= res.alpha.sum()
+
+
+def test_no_emd_superset(rng):
+    fleet = _fleet(rng)
+    strict = select(CFG, fleet, 352e6, 8).alpha
+    loose = select_no_emd(CFG, fleet, 352e6, 8)
+    assert np.all(loose >= strict)
+
+
+def test_two_scale_plan(rng):
+    fleet = _fleet(rng)
+    plan = plan_round(CFG, fleet, model_bits=352e6, batches=8)
+    if plan.selected:
+        K = len(plan.selected)
+        assert plan.l.shape == (K,) and plan.phi.shape == (K,)
+        assert plan.l.sum() <= CFG.num_subcarriers + 1e-6
+        assert np.all(plan.phi >= CFG.phi_min - 1e-9)
+        assert np.all(plan.phi <= np.array(
+            [fleet[i].phi_max for i in plan.selected]) + 1e-9)
+        assert plan.t_bar == pytest.approx(float(np.max(plan.t_cp + plan.t_mu)))
+        assert plan.b_gen >= 0
+        # BCD objective is non-increasing overall
+        assert plan.history[-1] <= plan.history[0] + 1e-6
+        # RSU finishes inside the straggler window (eq. 21 with t_max cap)
+        assert plan.t_rsu <= min(plan.t_bar, CFG.t_max) + 0.5
+
+
+def test_two_scale_beats_naive(rng):
+    """Allocated (l*, phi*) must not be worse than equal-share at phi_min."""
+    fleet = _fleet(rng)
+    plan = plan_round(CFG, fleet, model_bits=352e6, batches=8)
+    if not plan.selected:
+        pytest.skip("no vehicles selected in this draw")
+    sub = [fleet[i] for i in plan.selected]
+    n0 = channel.noise_watts(CFG)
+    dists = np.array([mobility.rsu_distance(CFG, v.x) for v in sub])
+    b_prime = CFG.unit_channel_gain * dists ** (-CFG.path_loss_exp) / n0
+    l_eq = bw.equal_share(len(sub), CFG.num_subcarriers)
+    t_naive = pw.t_of_phi(352e6, l_eq * CFG.subcarrier_bw, b_prime,
+                          np.full(len(sub), CFG.phi_min))
+    naive = float(np.max(plan.t_cp + t_naive))
+    assert plan.t_bar <= naive + 1e-6

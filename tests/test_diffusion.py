@@ -1,0 +1,59 @@
+"""DDPM (eq. 1-2): forward process statistics, loss descent, sampler."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.diffusion import DDPM, ddpm_loss, ddpm_sample, make_ddpm, q_sample
+
+TINY = DDPM(timesteps=8, num_classes=4, base_width=8)
+
+
+def test_q_sample_statistics():
+    """Eq. (1) composed: x_t ~ N(sqrt(abar) x0, (1-abar) I)."""
+    ddpm = DDPM(timesteps=100)
+    key = jax.random.PRNGKey(0)
+    x0 = jnp.ones((256, 32, 32, 3)) * 0.5
+    t = jnp.full((256,), 99, jnp.int32)
+    eps = jax.random.normal(key, x0.shape)
+    xt = q_sample(ddpm, x0, t, eps)
+    abar = float(ddpm.alpha_bars()[99])
+    assert float(xt.mean()) == pytest.approx(0.5 * np.sqrt(abar), abs=0.02)
+    assert float(xt.std()) == pytest.approx(np.sqrt(1 - abar) + 0.0, abs=0.05)
+
+
+def test_alpha_bars_monotone():
+    ab = np.asarray(TINY.alpha_bars())
+    assert np.all(np.diff(ab) < 0) and ab[0] < 1.0 and ab[-1] > 0.0
+
+
+def test_loss_decreases_with_training():
+    key = jax.random.PRNGKey(0)
+    params = make_ddpm(key, TINY)
+    x0 = jax.random.uniform(jax.random.PRNGKey(1), (16, 32, 32, 3),
+                            minval=-1, maxval=1)
+    y = jax.random.randint(jax.random.PRNGKey(2), (16,), 0, 4)
+
+    @jax.jit
+    def step(p, k):
+        loss, g = jax.value_and_grad(ddpm_loss, argnums=0)(p, TINY, k, x0, y)
+        p = jax.tree.map(lambda w, gg: w - 1e-3 * gg, p, g)
+        return p, loss
+
+    losses = []
+    k = jax.random.PRNGKey(3)
+    for i in range(20):
+        k, ks = jax.random.split(k)
+        params, l = step(params, ks)
+        losses.append(float(l))
+    assert np.isfinite(losses).all()
+    assert np.mean(losses[-5:]) < np.mean(losses[:5])
+
+
+def test_sampler_shapes_and_range():
+    params = make_ddpm(jax.random.PRNGKey(0), TINY)
+    out = ddpm_sample(params, TINY, jax.random.PRNGKey(1),
+                      np.array([0, 1, 2, 3]))
+    assert out.shape == (4, 32, 32, 3)
+    assert float(out.min()) >= -1.0 and float(out.max()) <= 1.0
+    assert bool(jnp.isfinite(out).all())

@@ -1,0 +1,78 @@
+"""Distribution layer: sharding rules (divisibility invariants, property
+based) and the GenFV weighted all-reduce (runs in a subprocess with 8 fake
+host devices so the main test process keeps 1 device)."""
+import subprocess
+import sys
+import os
+
+import jax
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.distributed.sharding import shard_leaf
+
+
+class _FakeMesh:
+    """Duck-typed mesh exposing .shape for the pure sharding rules."""
+    def __init__(self, shape):
+        self.shape = shape
+
+
+@given(st.lists(st.integers(1, 4096), min_size=1, max_size=4),
+       st.sampled_from([(16, 16), (2, 16, 16), (4, 2)]))
+@settings(max_examples=200, deadline=None)
+def test_shard_leaf_divisibility(shape, mesh_dims):
+    if len(mesh_dims) == 3:
+        mesh = _FakeMesh({"pod": mesh_dims[0], "data": mesh_dims[1],
+                          "model": mesh_dims[2]})
+    else:
+        mesh = _FakeMesh({"data": mesh_dims[0], "model": mesh_dims[1]})
+    spec = shard_leaf(shape, mesh)
+    for dim, ax in enumerate(spec):
+        if ax is None:
+            continue
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        size = int(np.prod([mesh.shape[a] for a in axes]))
+        assert shape[dim] % size == 0, (shape, spec)
+    # an axis name may appear at most once in the spec
+    used = [a for ax in spec if ax is not None
+            for a in (ax if isinstance(ax, tuple) else (ax,))]
+    assert len(used) == len(set(used))
+
+
+_SUBPROC = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys
+sys.path.insert(0, "src")
+import jax, jax.numpy as jnp, numpy as np
+from repro.distributed.collectives import genfv_weighted_allreduce
+
+mesh = jax.make_mesh((8,), ("data",))
+n = 8
+rng = np.random.default_rng(0)
+models = {"w": jnp.asarray(rng.normal(size=(n, 4, 3)), jnp.float32),
+          "b": jnp.asarray(rng.normal(size=(n, 5)), jnp.float32)}
+weights = jnp.asarray(rng.dirichlet(np.ones(n)), jnp.float32)
+out = genfv_weighted_allreduce(models, weights, mesh, axes=("data",))
+ref_w = np.tensordot(np.asarray(weights), np.asarray(models["w"]), axes=(0, 0))
+ref_b = np.tensordot(np.asarray(weights), np.asarray(models["b"]), axes=(0, 0))
+assert np.allclose(np.asarray(out["w"]), ref_w, atol=1e-5), "w mismatch"
+assert np.allclose(np.asarray(out["b"]), ref_b, atol=1e-5), "b mismatch"
+print("OK")
+"""
+
+
+def test_genfv_weighted_allreduce_subprocess():
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, "-c", _SUBPROC], cwd=os.path.join(
+        os.path.dirname(__file__), ".."), env=env, capture_output=True,
+        text=True, timeout=300)
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "OK" in r.stdout
+
+
+def test_main_process_single_device():
+    """Tests and benches must see 1 device (dry-run flags are module-local)."""
+    assert len(jax.devices()) == 1

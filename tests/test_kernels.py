@@ -1,0 +1,137 @@
+"""Pallas kernel sweeps vs the pure-jnp oracles (interpret=True on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.ref import flash_attention_ref, rglru_scan_ref
+from repro.kernels.rglru_scan import rglru_scan
+from repro.models.attention import sdpa_chunked
+
+ATTN_CASES = [
+    # Sq, Skv, nq, nkv, hd, window, softcap, bq, bk
+    (128, 128, 4, 2, 64, None, None, 64, 64),
+    (64, 256, 8, 1, 64, None, None, 64, 128),      # MQA, decode-ish context
+    (50, 130, 8, 2, 64, 32, 50.0, 64, 64),         # ragged + window + cap
+    (1, 256, 4, 4, 128, None, 30.0, 128, 128),     # single-token decode
+    (256, 256, 2, 2, 32, 64, None, 128, 64),
+    (33, 65, 6, 3, 64, 16, None, 32, 32),
+]
+
+
+@pytest.mark.parametrize("case", ATTN_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_vs_ref(case, dtype):
+    Sq, Skv, nq, nkv, hd, win, cap, bq, bk = case
+    rng = np.random.default_rng(hash(case) % 2 ** 31)
+    q = jnp.asarray(rng.normal(size=(2, Sq, nq, hd)), dtype)
+    k = jnp.asarray(rng.normal(size=(2, Skv, nkv, hd)), dtype)
+    v = jnp.asarray(rng.normal(size=(2, Skv, nkv, hd)), dtype)
+    q_pos = jnp.arange(Skv - Sq, Skv)[None].repeat(2, 0)
+    kv_pos = jnp.arange(Skv)[None].repeat(2, 0)
+    out = flash_attention(q, k, v, q_pos, kv_pos, window=win, softcap=cap,
+                          block_q=bq, block_k=bk)
+    ref = flash_attention_ref(q, k, v, q_pos, kv_pos, window=win, softcap=cap)
+    tol = 2e-6 if dtype == jnp.float32 else 2e-2
+    assert out.shape == ref.shape == (2, Sq, nq, hd)
+    assert float(jnp.abs(out.astype(jnp.float32)
+                         - ref.astype(jnp.float32)).max()) < tol
+
+
+def test_flash_attention_empty_slots():
+    """Cache slots with pos = -1 (empty ring-buffer lanes) never attend."""
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(size=(1, 4, 2, 32)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 64, 2, 32)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, 64, 2, 32)), jnp.float32)
+    kv_pos = jnp.where(jnp.arange(64) < 10, jnp.arange(64), -1)[None]
+    q_pos = jnp.arange(6, 10)[None]
+    out = flash_attention(q, k, v, q_pos, kv_pos, block_q=4, block_k=32)
+    # zero out v beyond slot 10 must not change anything
+    v2 = v.at[:, 10:].set(1e6)
+    out2 = flash_attention(q, k, v2, q_pos, kv_pos, block_q=4, block_k=32)
+    assert float(jnp.abs(out - out2).max()) < 1e-5
+
+
+@pytest.mark.parametrize("shape", [(2, 64, 32), (1, 100, 70), (3, 17, 5),
+                                   (2, 256, 128)])
+@pytest.mark.parametrize("blocks", [(16, 16), (64, 64), (32, 128)])
+def test_rglru_scan_vs_ref(shape, blocks):
+    B, S, W = shape
+    bt, bw = blocks
+    rng = np.random.default_rng(B * S * W)
+    la = jnp.asarray(-np.abs(rng.normal(size=shape)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=shape), jnp.float32)
+    out = rglru_scan(la, b, block_t=bt, block_w=bw)
+    ref = rglru_scan_ref(la, b)
+    assert float(jnp.abs(out - ref).max()) < 1e-5
+
+
+def test_sdpa_chunked_vs_ref_sweep():
+    """The XLA-native double-blocked SDPA (dry-run path) against the oracle."""
+    rng = np.random.default_rng(1)
+    for (Sq, Skv, nq, nkv, hd, win, cap) in [
+            (17, 33, 4, 2, 16, None, None), (64, 64, 8, 1, 32, 16, 50.0),
+            (1, 40, 4, 4, 8, None, 30.0)]:
+        q = jnp.asarray(rng.normal(size=(2, Sq, nq, hd)), jnp.float32)
+        k = jnp.asarray(rng.normal(size=(2, Skv, nkv, hd)), jnp.float32)
+        v = jnp.asarray(rng.normal(size=(2, Skv, nkv, hd)), jnp.float32)
+        q_pos = jnp.arange(Skv - Sq, Skv)[None].repeat(2, 0)
+        kv_pos = jnp.arange(Skv)[None].repeat(2, 0)
+        out = sdpa_chunked(q, k, v, q_pos, kv_pos, window=win,
+                           attn_softcap=cap, kv_chunk=16, q_chunk=8)
+        ref = flash_attention_ref(q, k, v, q_pos, kv_pos, window=win,
+                                  softcap=cap)
+        assert float(jnp.abs(out - ref).max()) < 5e-6
+
+
+def test_mlstm_chunkwise_equals_recurrent():
+    from repro.models.xlstm import _mlstm_cell_step, mlstm_seq
+    rng = np.random.default_rng(0)
+    B, S, H, hd = 2, 37, 3, 8
+    q, k, v = (jnp.asarray(rng.normal(size=(B, S, H, hd)), jnp.float32)
+               for _ in range(3))
+    it = jnp.asarray(rng.normal(size=(B, S, H)), jnp.float32)
+    ft = jnp.asarray(np.log(1 / (1 + np.exp(-rng.normal(size=(B, S, H))))),
+                     jnp.float32)
+    state = (jnp.zeros((B, H, hd, hd)), jnp.zeros((B, H, hd)),
+             jnp.zeros((B, H)))
+    C, n, m = state
+    hs_ref = []
+    for t in range(S):
+        (C, n, m), h = _mlstm_cell_step(
+            (C, n, m), (q[:, t], k[:, t], v[:, t], it[:, t], ft[:, t]))
+        hs_ref.append(h)
+    hs_ref = jnp.stack(hs_ref, 1)
+    for chunk in (8, 16, 37):
+        hs, (C2, n2, m2) = mlstm_seq(q, k, v, it, ft, state, chunk=chunk)
+        assert float(jnp.abs(hs - hs_ref).max()) < 1e-4
+        assert float(jnp.abs(C2 - C).max()) < 1e-4
+
+
+# ---------------------------------------------------------------------------
+# Property sweep: random shapes, flash kernel vs oracle
+# ---------------------------------------------------------------------------
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+
+@given(st.integers(1, 3), st.integers(1, 48), st.integers(1, 64),
+       st.sampled_from([(1, 1), (2, 1), (4, 2), (4, 4)]),
+       st.sampled_from([16, 32, 64]),
+       st.sampled_from([None, 8, 24]))
+@settings(max_examples=12, deadline=None)
+def test_flash_attention_property(B, Sq, Skv, heads, hd, win):
+    import numpy as _np
+    nq, nkv = heads
+    Sq = min(Sq, Skv)               # causal decode-style alignment
+    rng = _np.random.default_rng(B * 1000 + Sq * 10 + Skv)
+    q = jnp.asarray(rng.normal(size=(B, Sq, nq, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, Skv, nkv, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, Skv, nkv, hd)), jnp.float32)
+    q_pos = jnp.arange(Skv - Sq, Skv)[None].repeat(B, 0)
+    kv_pos = jnp.arange(Skv)[None].repeat(B, 0)
+    out = flash_attention(q, k, v, q_pos, kv_pos, window=win,
+                          block_q=16, block_k=16)
+    ref = flash_attention_ref(q, k, v, q_pos, kv_pos, window=win)
+    assert float(jnp.abs(out - ref).max()) < 5e-6

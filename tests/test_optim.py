@@ -1,0 +1,58 @@
+"""Optimizers + schedules (incl. MiniCPM's WSD)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim import (adamw, constant_schedule, cosine_schedule, momentum,
+                         sgd, wsd_schedule)
+from repro.optim.optimizers import clip_by_global_norm, global_norm
+
+
+@pytest.mark.parametrize("make", [
+    lambda: sgd(constant_schedule(0.1)),
+    lambda: momentum(constant_schedule(0.05)),
+    lambda: adamw(constant_schedule(0.1)),
+])
+def test_descends_quadratic(make):
+    opt = make()
+    params = {"x": jnp.array([3.0, -2.0])}
+    state = opt.init(params)
+    for _ in range(100):
+        grads = jax.grad(lambda p: jnp.sum(p["x"] ** 2))(params)
+        params, state = opt.update(grads, state, params)
+    assert float(jnp.abs(params["x"]).max()) < 0.05
+
+
+def test_adamw_weight_decay():
+    opt = adamw(constant_schedule(0.1), weight_decay=0.1)
+    params = {"x": jnp.array([5.0])}
+    state = opt.init(params)
+    grads = {"x": jnp.array([0.0])}
+    p1, _ = opt.update(grads, state, params)
+    assert float(p1["x"][0]) < 5.0      # decay pulls toward zero
+
+
+def test_wsd_phases():
+    f = wsd_schedule(1.0, total_steps=100, warmup=10, decay_frac=0.2)
+    assert float(f(0)) == 0.0
+    assert float(f(5)) == pytest.approx(0.5)
+    assert float(f(50)) == pytest.approx(1.0)          # stable plateau
+    assert float(f(79)) == pytest.approx(1.0)
+    assert float(f(99)) < 0.1                          # decayed
+    # monotone during decay
+    d = [float(f(s)) for s in range(80, 100)]
+    assert all(a >= b for a, b in zip(d, d[1:]))
+
+
+def test_cosine_schedule():
+    f = cosine_schedule(1.0, 100, warmup=10, final_frac=0.1)
+    assert float(f(10)) == pytest.approx(1.0, abs=1e-2)
+    assert float(f(100)) == pytest.approx(0.1, abs=1e-2)
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((3,), 10.0), "b": jnp.full((2,), -10.0)}
+    clipped, gn = clip_by_global_norm(g, 1.0)
+    assert float(gn) == pytest.approx(np.sqrt(500.0))
+    assert float(global_norm(clipped)) == pytest.approx(1.0, rel=1e-5)

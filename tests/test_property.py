@@ -1,0 +1,147 @@
+"""Hypothesis property tests on system invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import GenFVConfig
+from repro.core import convergence, emd, generation, mobility
+from repro.core.bandwidth import solve_bandwidth
+from repro.data.partition import dirichlet_partition
+
+CFG = GenFVConfig()
+
+
+@st.composite
+def histograms(draw, max_classes=20):
+    y = draw(st.integers(2, max_classes))
+    raw = draw(st.lists(st.floats(0.0, 1.0), min_size=y, max_size=y))
+    arr = np.asarray(raw) + 1e-9
+    return arr / arr.sum()
+
+
+@given(histograms())
+@settings(max_examples=100, deadline=None)
+def test_emd_bounds(p):
+    y = p.shape[0]
+    e = emd.emd(p)
+    assert -1e-9 <= e <= 2 * (y - 1) / y + 1e-9
+
+
+@given(histograms())
+@settings(max_examples=50, deadline=None)
+def test_emd_triangle_vs_pair(p):
+    """EMD to uniform == L1 distance; symmetric and zero iff equal."""
+    u = np.full_like(p, 1.0 / p.shape[0])
+    assert emd.emd(p) == emd.emd(u, p)
+    assert emd.emd(p, p) == 0.0
+
+
+@given(st.floats(0.0, 2.0))
+@settings(max_examples=100, deadline=None)
+def test_kappas_partition_of_unity(e):
+    k1, k2 = emd.kappas(e)
+    assert 0.0 <= k2 <= 1.0 and abs(k1 + k2 - 1.0) < 1e-12
+    # monotone: worse heterogeneity -> more AIGC weight
+    k1b, k2b = emd.kappas(min(e + 0.1, 2.0))
+    assert k2b >= k2 - 1e-12
+
+
+@given(st.lists(st.integers(1, 10_000), min_size=1, max_size=20))
+@settings(max_examples=100, deadline=None)
+def test_data_weights_simplex(sizes):
+    rho = emd.data_weights(sizes)
+    assert abs(rho.sum() - 1.0) < 1e-9
+    assert np.all(rho >= 0)
+    order = np.argsort(sizes)
+    assert np.all(np.diff(rho[order]) >= -1e-12)   # bigger data -> bigger rho
+
+
+@given(st.integers(2, 40), st.floats(0.05, 5.0), st.integers(1, 6))
+@settings(max_examples=20, deadline=None)
+def test_dirichlet_partition_exact_cover(n_clients, alpha, seed):
+    rng = np.random.default_rng(seed)
+    labels = rng.integers(0, 10, size=600)
+    parts = dirichlet_partition(labels, n_clients, alpha, rng, min_size=0)
+    allidx = np.concatenate(parts) if parts else np.array([])
+    assert len(allidx) == len(labels)
+    assert len(np.unique(allidx)) == len(labels)   # disjoint exact cover
+
+
+@given(st.floats(-400.0, 400.0), st.floats(5.0, 120.0), st.integers(0, 1))
+@settings(max_examples=100, deadline=None)
+def test_holding_time_nonnegative(x, speed, direction):
+    half = mobility.coverage_half_length(CFG)
+    x = max(min(x, half), -half)
+    v = speed if direction else -speed
+    t = mobility.holding_time(CFG, x, v)
+    assert t >= 0.0
+    # remaining distance shrinks as the vehicle advances along its direction
+    s1 = mobility.remaining_distance(CFG, x, v)
+    step = np.sign(v) * 1.0
+    if -half <= x + step <= half:
+        s2 = mobility.remaining_distance(CFG, x + step, v)
+        assert s2 <= s1
+
+
+@given(st.integers(0, 5000), st.integers(2, 200))
+@settings(max_examples=100, deadline=None)
+def test_label_schedule_total_and_balance(b, y):
+    c = generation.label_schedule(b, y)
+    assert c.sum() == b and c.max() - c.min() <= 1
+
+
+@given(st.integers(1, 12), st.integers(2, 50), st.floats(0.01, 0.09))
+@settings(max_examples=30, deadline=None)
+def test_theorem1_monotone_in_T(n, T, eta):
+    p = convergence.ConvergenceParams(eta=eta)
+    rhos = np.full(n, 1.0 / n)
+    lams = np.linspace(0.05, 0.3, n)
+    b1 = convergence.bound(p, T, rhos, lams, 0.8, 0.2)
+    b2 = convergence.bound(p, T + 1, rhos, lams, 0.8, 0.2)
+    assert b2 <= b1 + 1e-9
+
+
+@given(st.integers(1, 10), st.integers(2, 30))
+@settings(max_examples=30, deadline=None)
+def test_bandwidth_solver_feasible(seed, n):
+    rng = np.random.default_rng(seed)
+    A = rng.uniform(0.2, 1.0, n)
+    B = rng.uniform(0.5, 4.0, n)
+    C = np.zeros(n)
+    D = 0.3 * B
+    M = float(n)
+    res = solve_bandwidth(A, B, C, D, M, e_bar=50.0)
+    assert res.l.shape == (n,)
+    assert np.all(res.l > 0)
+    assert res.l.sum() <= M * 1.01
+    assert np.isfinite(res.t_bar)
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    import jax
+    from repro.checkpoint import restore_into, restore_tree, save_tree
+    tree = {"a": np.arange(6, dtype=np.float32).reshape(2, 3),
+            "b": [np.ones(4), (np.zeros(2), np.full(3, 7.0))],
+            "c": {"d": np.int32(3) * np.ones(1, np.int32)}}
+    path = str(tmp_path / "ckpt.npz")
+    save_tree(path, tree, metadata={"step": 12})
+    back = restore_tree(path)
+    for l1, l2 in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+        np.testing.assert_array_equal(np.asarray(l1), np.asarray(l2))
+    into = restore_into(tree, path)
+    assert jax.tree.structure(into) == jax.tree.structure(tree)
+
+
+@given(st.integers(1, 8), st.integers(1, 60), st.integers(1, 6))
+@settings(max_examples=25, deadline=None)
+def test_lru_scan_matches_naive(b, s, w):
+    import jax.numpy as jnp
+    from repro.models.rglru import lru_scan
+    rng = np.random.default_rng(b * s + w)
+    la = jnp.asarray(-np.abs(rng.normal(size=(b, s, w))), jnp.float32)
+    bb = jnp.asarray(rng.normal(size=(b, s, w)), jnp.float32)
+    out = lru_scan(la, bb)
+    h = np.zeros((b, w), np.float64)
+    for t in range(s):
+        h = np.exp(np.asarray(la[:, t], np.float64)) * h + np.asarray(bb[:, t], np.float64)
+        np.testing.assert_allclose(np.asarray(out[:, t]), h, rtol=2e-4,
+                                   atol=2e-5)
