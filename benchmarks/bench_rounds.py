@@ -1,0 +1,158 @@
+"""Fleet-engine rounds/sec benchmark: vectorized one-dispatch engine
+(fl/fleet.py) vs the sequential per-vehicle reference path.
+
+Measures the fleet-execution portion of a GenFV round — h local-SGD steps
+for all K selected vehicles plus the eq. (4) EMD-weighted aggregation — for
+K in {4, 8, 16, 32}:
+
+  sequential reference: K jitted `client_update` dispatches (each with its
+      per-vehicle host sync) followed by `core/emd.py::aggregate`'s
+      host-side leaf-by-leaf reduction (the seed implementation);
+  vectorized engine:    ONE fused dispatch (vmapped local SGD + on-device
+      stacked weighted reduction).
+
+The default sweep uses an edge-scale CNN (width 0.0625, 8x8 inputs):
+vehicular edge models are small, and that is the regime the engine targets —
+round time dominated by per-vehicle dispatch + host aggregation overhead
+rather than raw conv FLOPs. A paper-faithful 32x32 width-0.125 config is
+also measured at K=16 (reported under "faithful") so the compute-bound end
+of the spectrum stays visible; the ratio there is honest but smaller.
+
+  PYTHONPATH=src python -m benchmarks.bench_rounds [--quick] [--out PATH]
+
+Writes BENCH_rounds.json (default: repo root) and prints the house
+``name,us_per_call,derived`` CSV lines. --quick shrinks to 2 bucket sizes /
+1 local step for the tier-1 smoke test (tests/test_fleet.py).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+from typing import Dict, List, Sequence
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit
+from repro.configs.genfv_cifar import cnn_config
+from repro.core.emd import aggregate, data_weights, mean_emd
+from repro.data.synthetic import make_image_dataset
+from repro.fl.client import client_update
+from repro.fl.fleet import FleetEngine, bucket_size
+from repro.models.cnn import init_cnn
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DEFAULT_OUT = os.path.join(REPO_ROOT, "BENCH_rounds.json")
+
+
+def _time_rounds(fn, reps: int) -> float:
+    """Best-of-reps wall time per round (min over reps; each rep is one
+    full fleet round with fresh batch sampling, compile excluded)."""
+    fn(np.random.default_rng(0))                      # warmup / compile
+    best = float("inf")
+    for r in range(1, reps + 1):
+        t0 = time.perf_counter()
+        fn(np.random.default_rng(r))
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _bench_config(ks: Sequence[int], width: float, subsample: int, h: int,
+                  batch: int, reps: int, n_data: int = 1024,
+                  emd_bar: float = 0.5) -> List[Dict]:
+    cfg = cnn_config("cifar10", width)
+    params = init_cnn(jax.random.PRNGKey(0), cfg)
+    aug = init_cnn(jax.random.PRNGKey(1), cfg)
+    imgs, labels = make_image_dataset("cifar10", n_data, seed=0)
+    imgs = imgs[:, ::subsample, ::subsample, :]
+
+    rows = []
+    for K in ks:
+        datasets = [(imgs[i::K], labels[i::K]) for i in range(K)]
+        rhos = data_weights([len(d[1]) for d in datasets])
+        # donate=False: every rep restarts from the same params pytree, which
+        # a donating dispatch would invalidate on accelerator backends
+        engine = FleetEngine(cfg, h, batch, lr=5e-2, donate=False)
+
+        def run_vectorized(rng):
+            bi, bl = zip(*[engine.sample_batches(rng, di, dl)
+                           for di, dl in datasets])
+            new, _ = engine.run(params, list(bi), list(bl), rhos, emd_bar,
+                                aug)
+            jax.block_until_ready(new)
+
+        def run_sequential(rng):
+            models = []
+            for di, dl in datasets:
+                m, _ = client_update(params, cfg, di, dl, rng, h, batch,
+                                     lr=5e-2)
+                models.append(m)
+            jax.block_until_ready(aggregate(models, rhos, aug, emd_bar))
+
+        t_vec = _time_rounds(run_vectorized, reps)
+        t_seq = _time_rounds(run_sequential, reps)
+        rows.append({
+            "K": K,
+            "bucket": bucket_size(K),
+            "t_vectorized_s": t_vec,
+            "t_sequential_s": t_seq,
+            "rounds_per_sec_vectorized": 1.0 / t_vec,
+            "rounds_per_sec_sequential": 1.0 / t_seq,
+            "speedup": t_seq / t_vec,
+        })
+        emit(f"rounds/K{K}_vectorized", t_vec * 1e6,
+             f"speedup={t_seq / t_vec:.2f}x")
+    return rows
+
+
+def run_bench(quick: bool = False) -> Dict:
+    if quick:
+        sweep_cfg = dict(ks=(4, 8), width=0.0625, subsample=4, h=1, batch=2,
+                         reps=2, n_data=256)
+        faithful_cfg = None
+    else:
+        sweep_cfg = dict(ks=(4, 8, 16, 32), width=0.0625, subsample=4, h=2,
+                         batch=4, reps=5)
+        faithful_cfg = dict(ks=(16,), width=0.125, subsample=1, h=2, batch=8,
+                            reps=3)
+
+    out: Dict = {
+        "bench": "fleet engine rounds/sec (vectorized vs sequential)",
+        "backend": jax.default_backend(),
+        "quick": quick,
+        "config": sweep_cfg,
+        "results": _bench_config(**sweep_cfg),
+    }
+    if faithful_cfg is not None:
+        out["faithful_config"] = faithful_cfg
+        out["faithful"] = _bench_config(**faithful_cfg)
+    return out
+
+
+def run(quick: bool = True) -> None:
+    """benchmarks.run entry point: quick CSV-only sweep."""
+    run_bench(quick=quick)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="tiny widths, 2 buckets, 1 local step (smoke mode)")
+    ap.add_argument("--out", default=DEFAULT_OUT,
+                    help=f"output JSON path (default {DEFAULT_OUT})")
+    args = ap.parse_args(argv)
+
+    with open(args.out, "w") as f:   # fail fast on an unwritable path,
+        f.write("{}")                # not after minutes of benching
+    print("name,us_per_call,derived")
+    res = run_bench(quick=args.quick)
+    with open(args.out, "w") as f:
+        json.dump(res, f, indent=2)
+    print(f"# wrote {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -10,7 +10,7 @@ import sys
 import time
 import traceback
 
-from benchmarks import (fig5_emd, fig6_selection, fig7_power,
+from benchmarks import (bench_rounds, fig5_emd, fig6_selection, fig7_power,
                         fig8_subproblems, fig9_generation, fig10_noniid,
                         roofline, theorem1)
 
@@ -23,6 +23,7 @@ MODULES = {
     "fig10": fig10_noniid.run,
     "theorem1": theorem1.run,
     "roofline": roofline.run,
+    "rounds": bench_rounds.run,          # quick sweep; full: -m benchmarks.bench_rounds
 }
 
 

@@ -74,6 +74,32 @@ def aggregate(models: Sequence, rhos: Sequence[float], aug_model, emd_bar: float
     return jax.tree.map(combine, *models, aug_model)
 
 
+def aggregate_stacked(stacked, weights, aug_model, aug_weight):
+    """On-device eq. (4) over a stacked pytree: each leaf of `stacked` has a
+    leading client axis [K, ...] and is reduced with `weights` [K] (already
+    kappa1 * rho_n, zero on padded slots), then kappa2 * omega_a is added.
+
+    Device-side replacement for `aggregate`'s host loop; traced inside the
+    fleet engine's fused dispatch (fl/fleet.py) so local SGD and aggregation
+    ship as one XLA program.
+
+    The weighted reduction is unrolled left-to-right rather than expressed as
+    `einsum('k,k...->...')`: XLA may split an einsum/reduce differently per
+    bucket size (1-ULP drift between K=4 and K=8 buckets), while explicit
+    ordered adds are never reassociated, so zero-weight padded slots append
+    exact `+ 0.0`s and the aggregate is bitwise identical across buckets.
+    """
+    def combine(s, a):
+        s32 = s.astype(jnp.float32)
+        fed = weights[0] * s32[0]
+        for i in range(1, s.shape[0]):
+            fed = fed + weights[i] * s32[i]
+        out = fed + aug_weight * a.astype(jnp.float32)
+        return out.astype(s.dtype)
+
+    return jax.tree.map(combine, stacked, aug_model)
+
+
 def lambda_bound(emd_n: float, g_n: float) -> float:
     """Eq. (3): gradient-divergence bound lambda_n <= EMD_n * g_n."""
     return emd_n * g_n

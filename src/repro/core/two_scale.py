@@ -50,8 +50,15 @@ def plan_round(cfg: GenFVConfig, fleet: List[Vehicle], model_bits: float,
     svc = svc or DiffusionService(steps=cfg.diffusion_steps)
 
     # ---- Large communication scale: label share + SUBP1 ------------------
-    sel = select(cfg, fleet, model_bits, batches)
-    alpha = sel.alpha if alpha_override is None else np.asarray(alpha_override)
+    # With an alpha_override the caller already ran strategy-specific
+    # selection (fl/rounds.py), so re-running SUBP1 here would double the
+    # selection work per round; plan.selection is None in that case.
+    if alpha_override is None:
+        sel = select(cfg, fleet, model_bits, batches)
+        alpha = sel.alpha
+    else:
+        sel = None
+        alpha = np.asarray(alpha_override)
     idx = [i for i in range(len(fleet)) if alpha[i] == 1]
     if not idx:
         return RoundPlan(alpha, [], np.zeros(0), np.zeros(0), 0,

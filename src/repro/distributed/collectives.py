@@ -16,6 +16,11 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+try:                                  # jax >= 0.6 exposes it at top level
+    _shard_map = jax.shard_map
+except AttributeError:                # jax 0.4.x: experimental namespace
+    from jax.experimental.shard_map import shard_map as _shard_map
+
 
 def genfv_weighted_allreduce(models, weights, mesh: Mesh, axes=("data",)):
     """models: pytree stacked on axis 0 with one entry per mesh cohort
@@ -41,7 +46,7 @@ def genfv_weighted_allreduce(models, weights, mesh: Mesh, axes=("data",)):
             lambda m: jax.lax.psum(m, axes), scaled)
         return summed
 
-    fn = jax.shard_map(agg, mesh=mesh, in_specs=in_specs,
-                       out_specs=out_specs)
+    fn = _shard_map(agg, mesh=mesh, in_specs=in_specs,
+                    out_specs=out_specs)
     return fn(models, weights)
 

@@ -1,1 +1,2 @@
+from repro.fl.fleet import FleetEngine
 from repro.fl.rounds import GenFVRunner, RunConfig

@@ -12,13 +12,16 @@ import numpy as np
 from repro.models.cnn import cnn_loss
 
 
-@partial(jax.jit, static_argnums=(1, 4, 6))
-def local_sgd(params, cfg, batches_imgs, batches_labels, h: int, lr: float,
-              prox_mu: float = 0.0):
+def local_sgd_steps(params, cfg, batches_imgs, batches_labels, h: int,
+                    lr: float, prox_mu: float = 0.0):
     """h SGD steps over stacked batches (imgs [h,B,H,W,C], labels [h,B]).
 
     prox_mu > 0 adds FedProx's proximal term mu/2 ||w - w_global||^2 anchored
-    at the incoming global model."""
+    at the incoming global model.
+
+    Un-jitted body shared by the jitted per-vehicle `local_sgd` (sequential
+    reference path) and the vmapped fleet engine (fl/fleet.py), so both paths
+    trace the exact same math."""
     anchor = params
 
     def step(p, imgs, labels):
@@ -40,6 +43,9 @@ def local_sgd(params, cfg, batches_imgs, batches_labels, h: int, lr: float,
         params, l = step(params, batches_imgs[i], batches_labels[i])
         losses.append(l)
     return params, jnp.stack(losses)
+
+
+local_sgd = partial(jax.jit, static_argnums=(1, 4, 6))(local_sgd_steps)
 
 
 def client_update(params, cfg, images, labels, rng: np.random.Generator,

@@ -28,12 +28,17 @@ from repro.core.selection import (select, select_madca, select_no_emd,
 from repro.data.partition import dirichlet_partition
 from repro.data.synthetic import DATASET_CLASSES, make_image_dataset
 from repro.fl.client import client_update
+from repro.fl.fleet import FleetEngine
 from repro.fl.generator import OracleGenerator
 from repro.fl.server import GenFVServer
 from repro.models.cnn import cnn_forward, init_cnn
 
 STRATEGIES = ("genfv", "fedavg", "no_emd", "madca", "ocean",
               "fl_only", "aigc_only", "fedprox")
+
+# moderate client lr: high-lr few-class local models drift into incompatible
+# basins and weight-average destructively
+CLIENT_LR = 5e-2
 
 
 @dataclass
@@ -47,6 +52,8 @@ class RunConfig:
     width_mult: float = 0.25
     seed: int = 0
     model_bits: float | None = None      # default: 32 bits/param of the CNN
+    vectorized: bool = True              # fused fleet engine vs sequential
+                                         # per-vehicle reference path
 
 
 @dataclass
@@ -92,9 +99,17 @@ class GenFVRunner:
         key = jax.random.PRNGKey(run.seed)
         params = init_cnn(key, self.cnn_cfg)
         n_params = sum(x.size for x in jax.tree.leaves(params))
-        self.model_bits = run.model_bits or n_params * 32.0
+        # explicit None check: model_bits=0.0 is a legal override (free comms)
+        self.model_bits = (run.model_bits if run.model_bits is not None
+                           else n_params * 32.0)
         gen = generator or OracleGenerator(run.dataset)
         self.server = GenFVServer(self.cnn_cfg, params, gen, self.rng)
+        # max_bucket at the hard ceiling: fleet size is Poisson(num_vehicles),
+        # so K can exceed the engine's conservative default cap; buckets
+        # compile lazily, an unused headroom costs nothing
+        self.engine = FleetEngine(self.cnn_cfg, self.cfg.local_steps,
+                                  self.cfg.batch_size, lr=CLIENT_LR,
+                                  max_bucket=4096)
         self.classes = classes
         self.b_prev = 0
         cfg_cnn = self.cnn_cfg
@@ -143,50 +158,65 @@ class GenFVRunner:
         use_fl = run.strategy != "aigc_only"
         prox_mu = 0.1 if run.strategy == "fedprox" else 0.0
 
-        models, msizes, memds = [], [], []
-        loss = 0.0
-        if use_fl:
-            for j in plan.selected:
-                v = fleet[j]
-                data_idx = order[j]
-                di, dl = self.client_data[data_idx]
-                if len(dl) < 2:
-                    continue
-                # moderate client lr: high-lr few-class local models drift
-                # into incompatible basins and weight-average destructively
-                m, l = client_update(self.server.params, self.cnn_cfg, di, dl,
-                                     self.rng, cfg.local_steps,
-                                     cfg.batch_size, lr=5e-2,
-                                     prox_mu=prox_mu)
-                models.append(m)
-                msizes.append(v.data_size)
-                memds.append(v.emd)
-                loss += l
-            loss = loss / max(len(models), 1)
-
+        # AIGC generation + augmented training run first: omega_a depends only
+        # on the round-start global model, and the fused fleet dispatch below
+        # consumes it as the kappa2 term of eq. (4).
         aug = None
+        loss = 0.0
         if use_aigc:
             counts = label_schedule(plan.b_gen if use_fl else cfg.gen_batch * 4,
                                     self.classes)
             self.server.generate(counts)
             aug, aug_loss = self.server.train_augmented(
                 cfg.local_steps * cfg.rsu_steps_factor, cfg.batch_size,
-                lr=5e-2)
+                lr=CLIENT_LR)
             if not use_fl:
                 loss = aug_loss
+
+        n_trained = 0
+        msizes, memds = [], []
+        if use_fl:
+            models = []                # sequential reference path
+            bimgs, blabels = [], []    # vectorized engine path
+            for j in plan.selected:
+                v = fleet[j]
+                di, dl = self.client_data[order[j]]
+                if len(dl) < 2:
+                    continue
+                if run.vectorized:
+                    bi, bl = self.engine.sample_batches(self.rng, di, dl)
+                    bimgs.append(bi)
+                    blabels.append(bl)
+                else:
+                    m, l = client_update(self.server.params, self.cnn_cfg,
+                                         di, dl, self.rng, cfg.local_steps,
+                                         cfg.batch_size, lr=CLIENT_LR,
+                                         prox_mu=prox_mu)
+                    models.append(m)
+                    loss += l
+                msizes.append(v.data_size)
+                memds.append(v.emd)
+            n_trained = len(msizes)
+            if run.vectorized and bimgs:
+                _, (k1, k2), losses = self.server.fleet_round(
+                    self.engine, bimgs, blabels, msizes, memds,
+                    aug if use_aigc else None, prox_mu)
+                loss = float(losses.mean())
+            else:
+                _, (k1, k2) = self.server.aggregate(
+                    models, msizes, memds, aug if use_aigc else None)
+                loss = loss / max(len(models), 1)
 
         if run.strategy == "aigc_only":
             self.server.params = aug
             k2 = 1.0
             emd_bar = 0.0
         else:
-            _, (k1, k2) = self.server.aggregate(models, msizes, memds,
-                                                aug if use_aigc else None)
             emd_bar = float(np.mean(memds)) if memds else 0.0
 
         acc = float(self._eval(self.server.params, self.test_imgs,
                                self.test_labels))
-        return RoundLog(t, len(models), plan.t_bar, plan.b_gen, k2,
+        return RoundLog(t, n_trained, plan.t_bar, plan.b_gen, k2,
                         emd_bar, float(loss), acc)
 
     # ------------------------------------------------------------------

@@ -40,6 +40,20 @@ class GenFVServer:
         return client_update(self.params, self.cfg_model, self.pool_imgs,
                              self.pool_labels, self.rng, h, batch_size, lr)
 
+    # ---- fused vehicle SGD + aggregation (fleet engine path) --------------
+    def fleet_round(self, engine, imgs_list: List, labels_list: List,
+                    sizes: Sequence[int], emds: Sequence[float],
+                    aug_model=None, prox_mu: float = 0.0):
+        """Run all selected vehicles' local SGD and the eq. (4) aggregation
+        as one fused dispatch (fl/fleet.py). `self.params` is donated to the
+        dispatch and rebound to the aggregated output. The sequential
+        reference path is `client_update` per vehicle + `aggregate`."""
+        rhos = data_weights(sizes)
+        emd_bar = mean_emd(emds) if aug_model is not None else 0.0
+        self.params, losses = engine.run(self.params, imgs_list, labels_list,
+                                         rhos, emd_bar, aug_model, prox_mu)
+        return self.params, kappas(emd_bar), losses
+
     # ---- aggregation (eq. 4) ----------------------------------------------
     def aggregate(self, vehicle_models: List, sizes: Sequence[int],
                   emds: Sequence[float], aug_model=None):

@@ -37,12 +37,15 @@ def test_loss_decreases_with_training():
     @jax.jit
     def step(p, k):
         loss, g = jax.value_and_grad(ddpm_loss, argnums=0)(p, TINY, k, x0, y)
-        p = jax.tree.map(lambda w, gg: w - 1e-3 * gg, p, g)
+        # lr 2e-2 / 40 steps: at lr 1e-3 x 20 the loss trend stays below the
+        # per-step noise of resampled diffusion timesteps and the assertion
+        # is vacuous (flaky-red on CPU)
+        p = jax.tree.map(lambda w, gg: w - 2e-2 * gg, p, g)
         return p, loss
 
     losses = []
     k = jax.random.PRNGKey(3)
-    for i in range(20):
+    for i in range(40):
         k, ks = jax.random.split(k)
         params, l = step(params, ks)
         losses.append(float(l))

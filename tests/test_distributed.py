@@ -7,7 +7,13 @@ import os
 
 import jax
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+try:  # hypothesis is optional in the image; only the property sweep needs it
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
 
 from repro.distributed.sharding import shard_leaf
 
@@ -18,26 +24,30 @@ class _FakeMesh:
         self.shape = shape
 
 
-@given(st.lists(st.integers(1, 4096), min_size=1, max_size=4),
-       st.sampled_from([(16, 16), (2, 16, 16), (4, 2)]))
-@settings(max_examples=200, deadline=None)
-def test_shard_leaf_divisibility(shape, mesh_dims):
-    if len(mesh_dims) == 3:
-        mesh = _FakeMesh({"pod": mesh_dims[0], "data": mesh_dims[1],
-                          "model": mesh_dims[2]})
-    else:
-        mesh = _FakeMesh({"data": mesh_dims[0], "model": mesh_dims[1]})
-    spec = shard_leaf(shape, mesh)
-    for dim, ax in enumerate(spec):
-        if ax is None:
-            continue
-        axes = ax if isinstance(ax, tuple) else (ax,)
-        size = int(np.prod([mesh.shape[a] for a in axes]))
-        assert shape[dim] % size == 0, (shape, spec)
-    # an axis name may appear at most once in the spec
-    used = [a for ax in spec if ax is not None
-            for a in (ax if isinstance(ax, tuple) else (ax,))]
-    assert len(used) == len(set(used))
+if HAVE_HYPOTHESIS:
+    @given(st.lists(st.integers(1, 4096), min_size=1, max_size=4),
+           st.sampled_from([(16, 16), (2, 16, 16), (4, 2)]))
+    @settings(max_examples=200, deadline=None)
+    def test_shard_leaf_divisibility(shape, mesh_dims):
+        if len(mesh_dims) == 3:
+            mesh = _FakeMesh({"pod": mesh_dims[0], "data": mesh_dims[1],
+                              "model": mesh_dims[2]})
+        else:
+            mesh = _FakeMesh({"data": mesh_dims[0], "model": mesh_dims[1]})
+        spec = shard_leaf(shape, mesh)
+        for dim, ax in enumerate(spec):
+            if ax is None:
+                continue
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            size = int(np.prod([mesh.shape[a] for a in axes]))
+            assert shape[dim] % size == 0, (shape, spec)
+        # an axis name may appear at most once in the spec
+        used = [a for ax in spec if ax is not None
+                for a in (ax if isinstance(ax, tuple) else (ax,))]
+        assert len(used) == len(set(used))
+else:
+    def test_shard_leaf_divisibility():
+        pytest.skip("hypothesis not installed; property sweep skipped")
 
 
 _SUBPROC = r"""

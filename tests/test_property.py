@@ -1,6 +1,10 @@
 """Hypothesis property tests on system invariants."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="hypothesis not in the image; property sweeps skip")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.configs.base import GenFVConfig
 from repro.core import convergence, emd, generation, mobility
