@@ -1,0 +1,158 @@
+"""repro.sim world benchmark: vectorized world-step throughput at 10k-100k
+vehicles, plus a per-scenario GenFV accuracy sweep.
+
+Throughput: a pure-traffic world (no data partitions) is stepped repeatedly;
+each step is the full pipeline — eq.-24 road-load speed feedback, AR(1)
+speed/shadowing innovations, position advance, departures, Poisson arrivals.
+Reported as steps/sec and vehicle-steps/sec (population x step rate), the
+number that has to hold up when the simulated cell scales far past the
+paper's 40-vehicle operating point.
+
+Scenario sweep: every registered scenario runs end-to-end through
+`GenFVRunner.train()` at a reduced scale and reports final accuracy, mean
+selected vehicles, and total mid-round dropouts — the knob-to-outcome table
+the ROADMAP's scenario-diversity goal asks for.
+
+  PYTHONPATH=src python -m benchmarks.bench_world [--quick] [--out PATH]
+
+Writes BENCH_world.json (default: repo root) and prints the house
+``name,us_per_call,derived`` CSV lines. --quick shrinks to one population
+size and a single 1-round scenario smoke (tier-1: tests/test_sim.py).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.configs.base import GenFVConfig
+from repro.core.mobility import coverage_half_length
+from repro.sim import SCENARIOS, VehicularWorld, get_scenario
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DEFAULT_OUT = os.path.join(REPO_ROOT, "BENCH_world.json")
+
+
+def bench_throughput(n_vehicles: int, steps: int, dt: float = 3.0) -> Dict:
+    """Step a pure-traffic world of ~n_vehicles and time the step loop."""
+    scn = get_scenario("highway_free_flow")
+    half_speed_ms = 90.0 / 3.6          # rough free-flow equilibrium speed
+    cfg = dataclasses.replace(
+        scn.apply(GenFVConfig()),
+        m_max=4 * n_vehicles,           # keep eq. 24 out of the jam regime
+        shadow_sigma_db=4.0,
+    )
+    chord = 2.0 * coverage_half_length(cfg)
+    # arrivals balance departures so the population stays ~n_vehicles
+    cfg = dataclasses.replace(cfg,
+                              arrival_rate=n_vehicles * half_speed_ms / chord)
+    scn = dataclasses.replace(scn, init_mean=float(n_vehicles))
+    rng = np.random.default_rng(0)
+    world = VehicularWorld(cfg, scn, n_partitions=0, rng=rng)
+
+    for _ in range(2):                  # warmup (allocator, caches)
+        world.step(rng, dt)
+    pops = []
+    t0 = time.perf_counter()
+    for _ in range(steps):
+        world.step(rng, dt)
+        pops.append(world.n)
+    elapsed = time.perf_counter() - t0
+
+    mean_pop = float(np.mean(pops))
+    row = {
+        "n_vehicles": n_vehicles,
+        "mean_population": mean_pop,
+        "steps": steps,
+        "steps_per_sec": steps / elapsed,
+        "vehicle_steps_per_sec": mean_pop * steps / elapsed,
+        "arrivals": world.stats.arrivals,
+        "departures": world.stats.departures,
+    }
+    emit(f"world/step_N{n_vehicles}", elapsed / steps * 1e6,
+         f"veh_steps_per_sec={row['vehicle_steps_per_sec']:.3g}")
+    return row
+
+
+def bench_scenarios(scenarios: List[str], rounds: int, train_size: int,
+                    width_mult: float, strategy: str = "genfv") -> List[Dict]:
+    # imported lazily to keep the fl stack (CNN models, fleet engine, jit
+    # caches) out of the throughput-only path; jax itself is already loaded
+    # transitively via repro.core
+    from repro.fl.rounds import GenFVRunner, RunConfig
+
+    rows = []
+    for name in scenarios:
+        run = RunConfig(rounds=rounds, train_size=train_size, test_size=64,
+                        width_mult=width_mult, strategy=strategy, seed=0,
+                        scenario=name)
+        fl_cfg = GenFVConfig(batch_size=8, local_steps=2, num_vehicles=10)
+        t0 = time.perf_counter()
+        res = GenFVRunner(run, fl_cfg=fl_cfg).train()
+        elapsed = time.perf_counter() - t0
+        row = {
+            "scenario": name,
+            "rounds": rounds,
+            "final_accuracy": float(res.curve("accuracy")[-1]),
+            "mean_selected": float(res.curve("selected").mean()),
+            "total_dropped": int(res.curve("dropped").sum()),
+            "mean_t_bar": float(res.curve("t_bar").mean()),
+            "wall_s": elapsed,
+        }
+        rows.append(row)
+        emit(f"world/scenario_{name}", elapsed / rounds * 1e6,
+             f"acc={row['final_accuracy']:.3f} sel={row['mean_selected']:.1f} "
+             f"drop={row['total_dropped']}")
+    return rows
+
+
+def run_bench(quick: bool = False) -> Dict:
+    if quick:
+        sizes, steps = (10_000,), 30
+        sweep = dict(scenarios=["rush_hour"], rounds=1, train_size=256,
+                     width_mult=0.0625)
+    else:
+        sizes, steps = (10_000, 30_000, 100_000), 100
+        sweep = dict(scenarios=sorted(SCENARIOS), rounds=6, train_size=1200,
+                     width_mult=0.125)
+    out: Dict = {
+        "bench": "repro.sim world-step throughput + scenario sweep",
+        "quick": quick,
+        "throughput": [bench_throughput(n, steps) for n in sizes],
+        "sweep_config": sweep,
+        "scenarios": bench_scenarios(**sweep),
+    }
+    return out
+
+
+def run(quick: bool = True) -> None:
+    """benchmarks.run entry point: quick CSV-only sweep."""
+    run_bench(quick=quick)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="one population size, 1-round single-scenario smoke")
+    ap.add_argument("--out", default=DEFAULT_OUT,
+                    help=f"output JSON path (default {DEFAULT_OUT})")
+    args = ap.parse_args(argv)
+
+    with open(args.out, "a"):        # fail fast on an unwritable path
+        pass                         # (append probe: keep prior results)
+    print("name,us_per_call,derived")
+    res = run_bench(quick=args.quick)
+    with open(args.out, "w") as f:
+        json.dump(res, f, indent=2)
+    print(f"# wrote {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

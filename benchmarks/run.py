@@ -10,9 +10,9 @@ import sys
 import time
 import traceback
 
-from benchmarks import (bench_rounds, fig5_emd, fig6_selection, fig7_power,
-                        fig8_subproblems, fig9_generation, fig10_noniid,
-                        roofline, theorem1)
+from benchmarks import (bench_rounds, bench_world, fig5_emd, fig6_selection,
+                        fig7_power, fig8_subproblems, fig9_generation,
+                        fig10_noniid, roofline, theorem1)
 
 MODULES = {
     "fig5": fig5_emd.run,
@@ -24,6 +24,7 @@ MODULES = {
     "theorem1": theorem1.run,
     "roofline": roofline.run,
     "rounds": bench_rounds.run,          # quick sweep; full: -m benchmarks.bench_rounds
+    "world": bench_world.run,            # sim world; full: -m benchmarks.bench_world
 }
 
 

@@ -25,6 +25,9 @@ def main():
     ap.add_argument("--alpha", type=float, default=0.1)
     ap.add_argument("--dataset", default="cifar10")
     ap.add_argument("--schemes", default="genfv,fl_only,fedavg")
+    ap.add_argument("--scenario", default="highway_free_flow",
+                    help="repro.sim traffic scenario, or 'legacy' for the "
+                         "memoryless per-round fleet sampler")
     args = ap.parse_args()
 
     fl_cfg = GenFVConfig(batch_size=16, local_steps=4, num_vehicles=16)
@@ -35,7 +38,7 @@ def main():
             RunConfig(dataset=args.dataset, alpha=args.alpha,
                       rounds=args.rounds, strategy=scheme, train_size=2000,
                       test_size=192, width_mult=0.125, seed=3,
-                      model_bits=11.2e6 * 32),
+                      model_bits=11.2e6 * 32, scenario=args.scenario),
             fl_cfg=fl_cfg)
         res = runner.train(verbose=True)
         results[scheme] = res.curve("accuracy")

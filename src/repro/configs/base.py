@@ -290,3 +290,14 @@ class GenFVConfig:
     # diffusion service
     diffusion_steps: int = 50         # I
     gen_batch: int = 64               # images per generation batch
+    # --- repro.sim persistent-world layer (Sec. V-A2 made stateful) --------
+    # Poisson arrival rate at the coverage edges (veh/s, both directions
+    # combined). The default keeps the equilibrium population near
+    # num_vehicles for the nominal geometry/speeds. Ignored by the legacy
+    # memoryless per-round sampler.
+    arrival_rate: float = 1.1
+    # AR(1) log-normal shadowing on the uplink channel gain h0: stationary
+    # std-dev (dB) and decorrelation time constant (s). 0 dB disables
+    # shadowing, which is the legacy memoryless channel.
+    shadow_sigma_db: float = 0.0
+    shadow_corr_time: float = 20.0

@@ -25,6 +25,7 @@ class Vehicle:
     data_size: int        # |D_n|
     hist: np.ndarray      # label histogram p_n(y)
     emd: float            # EMD_n
+    gain_db: float = 0.0  # slow-fading shadowing offset on h0 (dB; sim layer)
 
 
 def average_speed(cfg: GenFVConfig, m_on_road: int) -> float:
@@ -64,17 +65,45 @@ def rsu_distance(cfg: GenFVConfig, x: float) -> float:
     return float(np.hypot(x, cfg.rsu_road_offset))
 
 
+# ---------------------------------------------------------------------------
+# Vectorized variants (repro.sim world stepping / dropout accounting). Same
+# math as the scalar functions above, applied elementwise to [N] arrays.
+# ---------------------------------------------------------------------------
+def remaining_distances(cfg: GenFVConfig, x: np.ndarray,
+                        v: np.ndarray) -> np.ndarray:
+    """Eq. (25) over arrays: s_n = sqrt(r^2-e^2) - sign(v_n) * x_n."""
+    half = coverage_half_length(cfg)
+    return half - np.sign(v) * np.asarray(x, np.float64)
+
+
+def holding_times(cfg: GenFVConfig, x: np.ndarray,
+                  v_kmh: np.ndarray) -> np.ndarray:
+    """Eq. (26) over arrays: t_hold = max(s_n, 0) / max(|v_n|, eps)."""
+    v_ms = np.abs(np.asarray(v_kmh, np.float64)) / 3.6
+    s = remaining_distances(cfg, x, v_kmh)
+    return np.maximum(s, 0.0) / np.maximum(v_ms, 1e-9)
+
+
+def rsu_distances(cfg: GenFVConfig, x: np.ndarray) -> np.ndarray:
+    """Euclidean vehicle -> RSU distance over an [N] position array."""
+    return np.hypot(np.asarray(x, np.float64), cfg.rsu_road_offset)
+
+
 def sample_fleet(rng: np.random.Generator, cfg: GenFVConfig, hists,
                  sizes) -> list[Vehicle]:
     """Sample the in-range fleet: Poisson count (capped to available data
     partitions), uniform positions on the coverage chord, eq.-24 speeds,
     random GPU/radio capabilities (Sec. VI-A3 ranges)."""
     n_avail = len(sizes)
-    n = min(max(rng.poisson(cfg.num_vehicles), 1), n_avail)
+    draw = rng.poisson(cfg.num_vehicles)
+    n = min(max(draw, 1), n_avail)
     half = coverage_half_length(cfg)
     xs = rng.uniform(-half, half, size=n)
     dirs = np.where(rng.random(n) < 0.5, -1.0, 1.0)
-    speeds = sample_speeds(rng, cfg, n, m_on_road=n) * dirs
+    # eq. 24 road load uses the UNCAPPED Poisson draw: capping to the number
+    # of available data partitions bounds how many vehicles can be FL clients,
+    # but the extra vehicles are still physically on the road and congest it.
+    speeds = sample_speeds(rng, cfg, n, m_on_road=max(draw, 1)) * dirs
     fleet = []
     for i in range(n):
         hist = np.asarray(hists[i], np.float64)

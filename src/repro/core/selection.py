@@ -25,6 +25,8 @@ class SelectionResult:
     t_cp: np.ndarray                 # nominal train time
     t_mu: np.ndarray                 # nominal upload time
     reasons: List[str]               # why each vehicle was kept/dropped
+    t_hold: np.ndarray | None = None  # [N] raw eq.-26 holding time (dropout
+                                      # accounting: t_bar caps it at t_max)
 
 
 def select(cfg: GenFVConfig, fleet: List[Vehicle], model_bits: float,
@@ -35,13 +37,16 @@ def select(cfg: GenFVConfig, fleet: List[Vehicle], model_bits: float,
     t_bar = np.zeros(n)
     t_cp = np.zeros(n)
     t_mu = np.zeros(n)
+    t_hold_arr = np.zeros(n)
     reasons = []
     for i, v in enumerate(fleet):
         t_hold = mobility.holding_time(cfg, v.x, v.v)
+        t_hold_arr[i] = t_hold
         t_bar[i] = min(t_hold, cfg.t_max)
         t_cp[i] = gpu_model.train_time(v, batches)
         d = mobility.rsu_distance(cfg, v.x)
-        t_mu[i] = channel.upload_time(cfg, model_bits, 1.0, v.phi_max, d)
+        t_mu[i] = channel.upload_time(cfg, model_bits, 1.0, v.phi_max, d,
+                                      gain_db=v.gain_db)
         if v.emd > emd_hat:
             reasons.append(f"v{v.vid}: dropped (EMD {v.emd:.2f} > {emd_hat})")
         elif t_cp[i] + t_mu[i] > t_bar[i]:
@@ -50,7 +55,26 @@ def select(cfg: GenFVConfig, fleet: List[Vehicle], model_bits: float,
         else:
             alpha[i] = 1
             reasons.append(f"v{v.vid}: selected")
-    return SelectionResult(alpha, t_bar, t_cp, t_mu, reasons)
+    return SelectionResult(alpha, t_bar, t_cp, t_mu, reasons, t_hold_arr)
+
+
+def dropout_mask(cfg: GenFVConfig, fleet: List[Vehicle],
+                 selected: List[int], t_round: float) -> np.ndarray:
+    """Survival mask over `selected`: True where the vehicle's eq.-26 holding
+    time covers the realized round duration `t_round`.
+
+    SUBP1 admits vehicles whose *nominal* budget fits inside min(t_hold,
+    t_max), but the realized straggler window t_bar is only known after
+    SUBP2-4 run for the selected set — a vehicle can leave coverage before
+    the synchronous round closes anyway, and its update is discarded
+    (commit-at-window-end semantics; rationale in DESIGN.md §repro.sim).
+    repro.sim threads the dropout count into RoundLog.
+    """
+    if not selected:
+        return np.zeros(0, bool)
+    xs = np.array([fleet[i].x for i in selected])
+    vs = np.array([fleet[i].v for i in selected])
+    return mobility.holding_times(cfg, xs, vs) >= t_round
 
 
 def select_random(rng: np.random.Generator, fleet, k: int) -> np.ndarray:
@@ -78,7 +102,8 @@ def select_madca(cfg: GenFVConfig, fleet, model_bits: float, batches: int,
     for i, v in enumerate(fleet):
         t_need = (gpu_model.train_time(v, batches)
                   + channel.upload_time(cfg, model_bits, 1.0, v.phi_max,
-                                        mobility.rsu_distance(cfg, v.x)))
+                                        mobility.rsu_distance(cfg, v.x),
+                                        gain_db=v.gain_db))
         # holding time at +/- 1.28 sigma speed (10%/90% quantiles)
         s = mobility.remaining_distance(cfg, v.x, v.v)
         v_hi = abs(v.v) * (1 + 1.28 * cfg.sigma_k) / 3.6
@@ -100,7 +125,8 @@ def select_ocean(cfg: GenFVConfig, fleet, model_bits: float, batches: int,
     for v in fleet:
         e = (gpu_model.train_energy(v, batches)
              + channel.upload_energy(cfg, model_bits, 1.0, v.phi_max,
-                                     mobility.rsu_distance(cfg, v.x)))
+                                     mobility.rsu_distance(cfg, v.x),
+                                     gain_db=v.gain_db))
         scores.append(e)
     order = np.argsort(scores)                      # cheapest energy first
     k = max(1, int(round(frac * len(fleet))))

@@ -21,7 +21,7 @@ from repro.core import bandwidth as bw
 from repro.core import channel, gpu_model, power as pw
 from repro.core.generation import DiffusionService, inference_time, optimal_generation
 from repro.core.gpu_model import rsu_train_time
-from repro.core.mobility import Vehicle, rsu_distance
+from repro.core.mobility import Vehicle, rsu_distances
 from repro.core.selection import SelectionResult, select
 
 
@@ -68,12 +68,16 @@ def plan_round(cfg: GenFVConfig, fleet: List[Vehicle], model_bits: float,
     K = len(sub)
 
     # ---- constants per selected vehicle ----------------------------------
-    dists = np.array([rsu_distance(cfg, v.x) for v in sub])
+    dists = rsu_distances(cfg, np.array([v.x for v in sub]))
     t_cp = np.array([gpu_model.train_time(v, batches) for v in sub])   # A
     p_run = np.array([gpu_model.runtime_power(v) for v in sub])
     e_cp = p_run * t_cp                                                # C (per =G)
     n0 = channel.noise_watts(cfg)
-    b_prime = cfg.unit_channel_gain * dists ** (-cfg.path_loss_exp) / n0
+    # per-vehicle shadowed channel gain (legacy fleets carry gain_db=0, where
+    # the 10^(0/10)=1.0 multiplier reproduces the unshadowed value bitwise)
+    shadow = channel.shadow_linear(np.array([v.gain_db for v in sub]))
+    b_prime = (cfg.unit_channel_gain * shadow
+               * dists ** (-cfg.path_loss_exp) / n0)
 
     # ---- Small computation scale: BCD over SUBP2/3/4 ----------------------
     l = bw.equal_share(K, cfg.num_subcarriers)

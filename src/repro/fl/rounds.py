@@ -23,8 +23,8 @@ from repro.configs.base import GenFVConfig
 from repro.configs.genfv_cifar import CNNConfig, cnn_config
 from repro.core import mobility, plan_round
 from repro.core.generation import label_schedule
-from repro.core.selection import (select, select_madca, select_no_emd,
-                                  select_ocean, select_random)
+from repro.core.selection import (dropout_mask, select, select_madca,
+                                  select_no_emd, select_ocean, select_random)
 from repro.data.partition import dirichlet_partition
 from repro.data.synthetic import DATASET_CLASSES, make_image_dataset
 from repro.fl.client import client_update
@@ -32,6 +32,7 @@ from repro.fl.fleet import FleetEngine
 from repro.fl.generator import OracleGenerator
 from repro.fl.server import GenFVServer
 from repro.models.cnn import cnn_forward, init_cnn
+from repro.sim import LEGACY, VehicularWorld, get_scenario
 
 STRATEGIES = ("genfv", "fedavg", "no_emd", "madca", "ocean",
               "fl_only", "aigc_only", "fedprox")
@@ -54,6 +55,9 @@ class RunConfig:
     model_bits: float | None = None      # default: 32 bits/param of the CNN
     vectorized: bool = True              # fused fleet engine vs sequential
                                          # per-vehicle reference path
+    # Fleet source: a repro.sim scenario name (persistent world, default) or
+    # "legacy" for the seed's memoryless per-round i.i.d. sampler.
+    scenario: str = "highway_free_flow"
 
 
 @dataclass
@@ -66,6 +70,7 @@ class RoundLog:
     emd_bar: float
     loss: float
     accuracy: float
+    dropped: int = 0     # selected vehicles that left coverage mid-round
 
 
 @dataclass
@@ -81,6 +86,12 @@ class GenFVRunner:
                  generator=None):
         self.run = run
         self.cfg = fl_cfg or GenFVConfig(dirichlet_alpha=run.alpha)
+        self.scenario = None if run.scenario == LEGACY \
+            else get_scenario(run.scenario)
+        if self.scenario is not None:
+            # overlay the scenario's physical-layer overrides (speed law,
+            # geometry, arrival rate, shadowing) onto the FL config
+            self.cfg = self.scenario.apply(self.cfg)
         self.rng = np.random.default_rng(run.seed)
         self.cnn_cfg: CNNConfig = cnn_config(run.dataset, run.width_mult)
         classes = DATASET_CLASSES[run.dataset]
@@ -95,6 +106,10 @@ class GenFVRunner:
         self.hists = [np.bincount(labels[ix], minlength=classes) /
                       max(len(ix), 1) for ix in parts]
         self.sizes = [len(ix) for ix in parts]
+        # persistent world: one data partition per vehicle residency
+        self.world = None if self.scenario is None else VehicularWorld(
+            self.cfg, self.scenario, n_partitions=len(self.client_data),
+            rng=self.rng)
 
         key = jax.random.PRNGKey(run.seed)
         params = init_cnn(key, self.cnn_cfg)
@@ -144,15 +159,33 @@ class GenFVRunner:
         run = self.run
         cfg = self.cfg
         # fleet of the round: vehicles map onto data partitions
-        order = self.rng.permutation(len(self.client_data))
-        hists = [self.hists[i] for i in order]
-        sizes = [self.sizes[i] for i in order]
-        fleet = mobility.sample_fleet(self.rng, cfg, hists, sizes)
+        if self.world is None:
+            # legacy memoryless sampler: a fresh i.i.d. fleet every round,
+            # mapped onto a fresh permutation of the data partitions
+            order = self.rng.permutation(len(self.client_data))
+            hists = [self.hists[i] for i in order]
+            sizes = [self.sizes[i] for i in order]
+            fleet = mobility.sample_fleet(self.rng, cfg, hists, sizes)
+            parts = order                       # parts[j]: fleet[j]'s data
+        else:
+            fleet, parts = self.world.fleet(self.hists, self.sizes)
 
-        alpha = self._alpha(fleet, t)
+        alpha = self._alpha(fleet, t) if fleet else np.zeros(0, np.int32)
         plan = plan_round(cfg, fleet, self.model_bits, cfg.local_steps,
                           b_prev=self.b_prev, alpha_override=alpha)
         self.b_prev = plan.b_gen
+
+        # Mid-round dropout (persistent world only): SUBP1 admitted against
+        # min(t_hold, t_max), but the realized straggler window plan.t_bar is
+        # only known after SUBP2-4 — a selected vehicle whose holding time
+        # falls short of it leaves coverage before uploading and contributes
+        # nothing. The legacy sampler has no vehicle persistence, so the
+        # seed's semantics (everyone selected finishes) are kept there.
+        survive = None
+        dropped = 0
+        if self.world is not None and plan.selected:
+            t_run = min(plan.t_bar, cfg.t_max)
+            survive = dropout_mask(cfg, fleet, plan.selected, t_run)
 
         use_aigc = run.strategy in ("genfv", "aigc_only")
         use_fl = run.strategy != "aigc_only"
@@ -178,9 +211,12 @@ class GenFVRunner:
         if use_fl:
             models = []                # sequential reference path
             bimgs, blabels = [], []    # vectorized engine path
-            for j in plan.selected:
+            for pos, j in enumerate(plan.selected):
+                if survive is not None and not survive[pos]:
+                    dropped += 1
+                    continue
                 v = fleet[j]
-                di, dl = self.client_data[order[j]]
+                di, dl = self.client_data[parts[j]]
                 if len(dl) < 2:
                     continue
                 if run.vectorized:
@@ -214,10 +250,20 @@ class GenFVRunner:
         else:
             emd_bar = float(np.mean(memds)) if memds else 0.0
 
+        # advance the world by the realized round wall-clock: the straggler
+        # window (or the RSU's generation window if longer — AIGC strategies
+        # only), floored so an empty round still consumes its scheduling
+        # slot, capped at t_max
+        if self.world is not None:
+            t_rsu = plan.t_rsu if use_aigc else 0.0
+            dt = max(plan.t_bar, t_rsu) if plan.selected else cfg.t_max
+            self.world.step(self.rng,
+                            float(np.clip(dt, 0.25 * cfg.t_max, cfg.t_max)))
+
         acc = float(self._eval(self.server.params, self.test_imgs,
                                self.test_labels))
         return RoundLog(t, n_trained, plan.t_bar, plan.b_gen, k2,
-                        emd_bar, float(loss), acc)
+                        emd_bar, float(loss), acc, dropped)
 
     # ------------------------------------------------------------------
     def train(self, verbose: bool = False) -> RunResult:
@@ -227,6 +273,6 @@ class GenFVRunner:
             res.logs.append(log)
             if verbose:
                 print(f"[{self.run.strategy}] round {t:3d} sel={log.selected:2d} "
-                      f"t_bar={log.t_bar:5.2f}s b={log.b_gen:4d} "
+                      f"drop={log.dropped} t_bar={log.t_bar:5.2f}s b={log.b_gen:4d} "
                       f"k2={log.kappa2:.3f} loss={log.loss:.3f} acc={log.accuracy:.3f}")
         return res

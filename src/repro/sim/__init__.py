@@ -1,0 +1,10 @@
+"""repro.sim — persistent vehicular world simulator.
+
+world       struct-of-arrays VehicularWorld: Poisson arrivals/departures,
+            eq.-24 road-load speed feedback, AR(1) log-normal shadowing,
+            persistent data-partition binding
+scenarios   named traffic presets + registry (RunConfig.scenario)
+"""
+from repro.sim.scenarios import (LEGACY, SCENARIOS, Scenario, get_scenario,
+                                 register, scenario_names)
+from repro.sim.world import VehicularWorld, WorldState, WorldStats

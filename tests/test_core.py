@@ -93,6 +93,65 @@ def test_holding_time_geometry():
     assert mobility.holding_time(CFG, half, 60.0) == pytest.approx(0.0)
 
 
+def test_remaining_distance_sign_convention():
+    """Eq. (25): the remaining distance is measured in the direction of
+    travel — mirrored positions/directions must agree, and driving away
+    from the near edge leaves the whole remaining chord."""
+    half = mobility.coverage_half_length(CFG)
+    # eastbound at +100 m has 'half - 100' left; westbound at -100 m mirrors
+    assert mobility.remaining_distance(CFG, 100.0, 60.0) == \
+        pytest.approx(half - 100.0)
+    assert mobility.remaining_distance(CFG, -100.0, -60.0) == \
+        pytest.approx(half - 100.0)
+    # driving back toward the far edge: remaining distance grows past half
+    assert mobility.remaining_distance(CFG, 100.0, -60.0) == \
+        pytest.approx(half + 100.0)
+    assert mobility.remaining_distance(CFG, -100.0, 60.0) == \
+        pytest.approx(half + 100.0)
+    # vectorized variant agrees with the scalar one
+    xs = np.array([100.0, -100.0, 100.0, -100.0])
+    vs = np.array([60.0, -60.0, -60.0, 60.0])
+    np.testing.assert_allclose(
+        mobility.remaining_distances(CFG, xs, vs),
+        [mobility.remaining_distance(CFG, x, v) for x, v in zip(xs, vs)])
+
+
+def test_holding_time_edge_cases():
+    half = mobility.coverage_half_length(CFG)
+    # |v| at the v_min floor: slowest legal crossing, finite and maximal
+    t_slow = mobility.holding_time(CFG, -half, CFG.v_min)
+    t_fast = mobility.holding_time(CFG, -half, CFG.v_max)
+    assert np.isfinite(t_slow) and t_slow > t_fast
+    assert t_slow == pytest.approx(2 * half / (CFG.v_min / 3.6), rel=1e-6)
+    # at and beyond the exit boundary the holding time clamps to zero
+    assert mobility.holding_time(CFG, half, 60.0) == 0.0
+    assert mobility.holding_time(CFG, half + 50.0, 60.0) == 0.0
+    assert mobility.holding_time(CFG, -half - 50.0, -60.0) == 0.0
+    # vectorized variant matches and clamps the same way
+    xs = np.array([-half, half, half + 50.0])
+    vs = np.array([CFG.v_min, 60.0, 60.0])
+    np.testing.assert_allclose(
+        mobility.holding_times(CFG, xs, vs),
+        [mobility.holding_time(CFG, x, v) for x, v in zip(xs, vs)])
+
+
+def test_sample_fleet_road_load_uses_uncapped_draw(rng):
+    """Eq. 24 congestion must see every vehicle the Poisson process put on
+    the road, not just the ones that fit the available data partitions —
+    with a huge arrival mean and few partitions the road is jammed and
+    speeds sit at the v_min floor (the pre-fix code passed the capped count
+    and sampled free-flow speeds instead)."""
+    import dataclasses
+    cfg = dataclasses.replace(CFG, num_vehicles=500)    # m_max = 60: jam
+    hists = rng.dirichlet(np.full(10, 0.3), size=5)
+    sizes = rng.integers(500, 2000, size=5)
+    fleet = mobility.sample_fleet(rng, cfg, hists, sizes)
+    assert len(fleet) == 5                              # capped to partitions
+    speeds = np.abs([v.v for v in fleet])
+    # v_bar = v_min = 10 km/h; the buggy capped count gave v_bar ~ 110 km/h
+    assert np.mean(speeds) < 30.0
+
+
 # ---------------------------------------------------------------------------
 # Channel + GPU models
 # ---------------------------------------------------------------------------
@@ -103,6 +162,23 @@ def test_uplink_rate_monotonic():
     r4 = channel.uplink_rate(CFG, 1.0, 0.5, 400.0)    # farther
     assert r2 > r1 and r3 > r1 and r4 < r1
     assert r3 == pytest.approx(2 * r1)               # rate linear in l_n
+
+
+def test_snr_monotone_in_distance_and_shadowing():
+    dists = np.linspace(50.0, 1000.0, 40)
+    snrs = np.array([channel.snr(CFG, 0.5, d) for d in dists])
+    assert np.all(np.diff(snrs) < 0)                 # strictly decreasing
+    # shadowing: +3 dB gain doubles SNR (10^(3/10) ~ 2), -3 dB halves it
+    base = channel.snr(CFG, 0.5, 200.0)
+    assert channel.snr(CFG, 0.5, 200.0, gain_db=3.0) == \
+        pytest.approx(base * 10 ** 0.3)
+    assert channel.snr(CFG, 0.5, 200.0, gain_db=-3.0) == \
+        pytest.approx(base / 10 ** 0.3)
+    # 0 dB reproduces the unshadowed value bitwise (legacy equivalence)
+    assert channel.snr(CFG, 0.5, 200.0, gain_db=0.0) == base
+    # faded uplink takes longer
+    assert channel.upload_time(CFG, 1e6, 1.0, 0.5, 200.0, gain_db=-10.0) > \
+        channel.upload_time(CFG, 1e6, 1.0, 0.5, 200.0)
 
 
 def test_gpu_energy_eq8():
@@ -188,6 +264,10 @@ def test_selection_emd_threshold(rng):
     for v, a in zip(fleet, res.alpha):
         if v.emd > 0.8:
             assert a == 0
+    # dropout-accounting stats: raw eq.-26 holding time, t_bar caps at t_max
+    np.testing.assert_allclose(
+        res.t_hold, [mobility.holding_time(CFG, v.x, v.v) for v in fleet])
+    np.testing.assert_allclose(res.t_bar, np.minimum(res.t_hold, CFG.t_max))
     loose = select(CFG, fleet, model_bits=1e6, batches=4, emd_hat=10.0)
     assert loose.alpha.sum() >= res.alpha.sum()
 

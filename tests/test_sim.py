@@ -1,0 +1,269 @@
+"""repro.sim: scenario registry, world invariants, AR(1) shadowing,
+mid-round dropout, legacy equivalence, and the cross-runner determinism
+guard for the persistent vehicular world.
+"""
+import dataclasses
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.configs.base import GenFVConfig
+from repro.core import mobility
+from repro.core.selection import dropout_mask
+from repro.fl.rounds import GenFVRunner, RunConfig
+from repro.sim import LEGACY, VehicularWorld, get_scenario, scenario_names
+
+REPO_ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+FAST = dict(rounds=1, train_size=300, test_size=32, width_mult=0.0625)
+FAST_CFG = GenFVConfig(batch_size=8, local_steps=2, num_vehicles=6)
+
+
+# ---------------------------------------------------------------------------
+# Scenario registry
+# ---------------------------------------------------------------------------
+def test_registry_presets():
+    names = scenario_names()
+    assert len(names) >= 5
+    for required in ("highway_free_flow", "rush_hour", "urban_stop_go",
+                     "platoon", "sparse_rural"):
+        assert required in names
+    assert LEGACY not in names            # sentinel, not a world scenario
+    with pytest.raises(KeyError, match="unknown scenario"):
+        get_scenario("autobahn_at_3am")
+
+
+def test_scenario_apply_overrides():
+    cfg = GenFVConfig()
+    urban = get_scenario("urban_stop_go").apply(cfg)
+    assert urban.rsu_radius == 300.0 and urban.v_max == 50.0
+    assert urban.num_vehicles == cfg.num_vehicles      # untouched fields keep
+    # a scenario with no geometry override keeps the paper cell
+    assert get_scenario("rush_hour").apply(cfg).rsu_radius == cfg.rsu_radius
+
+
+# ---------------------------------------------------------------------------
+# World stepping invariants
+# ---------------------------------------------------------------------------
+def _world(name="rush_hour", n_partitions=12, seed=0, **cfg_kw):
+    scn = get_scenario(name)
+    # test kwargs overlay ON TOP of the scenario's own overrides
+    cfg = dataclasses.replace(scn.apply(GenFVConfig()), **cfg_kw)
+    rng = np.random.default_rng(seed)
+    return VehicularWorld(cfg, scn, n_partitions, rng), rng, cfg
+
+
+def test_world_invariants_over_steps():
+    world, rng, cfg = _world()
+    half = mobility.coverage_half_length(cfg)
+    for _ in range(50):
+        world.step(rng, 3.0)
+        st = world.state
+        assert np.all(np.abs(st.x) <= half + 1e-9)       # nobody out of chord
+        assert np.all(np.abs(st.v) >= cfg.v_min - 1e-9)
+        assert np.all(np.abs(st.v) <= cfg.v_max + 1e-9)
+        bound = st.partition[st.partition >= 0]
+        assert len(np.unique(bound)) == len(bound)       # binding is unique
+        assert len(np.unique(st.vid)) == st.n            # ids persist uniquely
+        assert world.n_bound + len(world._free) == 12    # partition conservation
+    assert world.stats.arrivals > 0 and world.stats.departures > 0
+    assert world.stats.steps == 50 and world.stats.time == pytest.approx(150.0)
+
+
+def test_world_population_persists_between_steps():
+    """The whole point vs the legacy sampler: most vehicles survive a 3 s
+    round and keep their id, position (shifted), and partition binding."""
+    world, rng, _ = _world("highway_free_flow", n_partitions=40)
+    st0 = world.state
+    before = dict(zip(st0.vid.tolist(), st0.partition.tolist()))
+    x_before = dict(zip(st0.vid.tolist(), st0.x.tolist()))
+    world.step(rng, 3.0)
+    st1 = world.state
+    common = np.intersect1d(st0.vid, st1.vid)
+    assert len(common) >= 0.8 * st0.n                    # most persist
+    for vid in common[:10]:
+        i = int(np.flatnonzero(st1.vid == vid)[0])
+        assert st1.partition[i] == before[vid]           # binding persists
+        assert st1.x[i] != x_before[vid]                 # but they moved
+
+
+def test_world_departures_release_partitions():
+    # no arrivals, huge step: everyone crosses out of the chord and the
+    # partition pool refills completely
+    world, rng, cfg = _world("highway_free_flow", n_partitions=12,
+                             arrival_rate=0.0)
+    world.step(rng, 1e5)
+    assert world.n == 0
+    assert sorted(world._free) == list(range(12))
+    assert world.stats.departures > 0
+
+
+def test_world_blocked_arrivals_stay_unbound():
+    # 2 partitions, heavy arrivals: the road can exceed the bindable count,
+    # extra vehicles ride along unbound (partition = -1)
+    world, rng, _ = _world("rush_hour", n_partitions=2)
+    for _ in range(20):
+        world.step(rng, 3.0)
+    assert world.n_bound <= 2
+    assert world.n > 2                    # traffic exceeds data-bound fleet
+    assert world.stats.blocked_arrivals > 0
+
+
+def test_shadowing_ar1_memory():
+    sigma = 6.0
+    # corr_time >> dt: shadowing barely moves within a step
+    world, rng, _ = _world("highway_free_flow", n_partitions=4,
+                           shadow_sigma_db=sigma, shadow_corr_time=1e6)
+    st0 = world.state
+    world.step(rng, 1.0)
+    st1 = world.state
+    common, i0, i1 = np.intersect1d(st0.vid, st1.vid, return_indices=True)
+    assert len(common) > 10
+    drift = np.abs(st1.shadow_db[i1] - st0.shadow_db[i0])
+    assert np.max(drift) < 0.1 * sigma
+
+    # corr_time << dt: memoryless redraw at the stationary std
+    world2, rng2, _ = _world("highway_free_flow", n_partitions=4, seed=1,
+                             shadow_sigma_db=sigma, shadow_corr_time=1e-6)
+    samples = []
+    for _ in range(30):
+        world2.step(rng2, 1.0)
+        samples.append(world2.state.shadow_db.copy())
+    flat = np.concatenate(samples)
+    assert np.std(flat) == pytest.approx(sigma, rel=0.15)
+
+
+def test_fleet_view_maps_partitions():
+    world, rng, _ = _world("highway_free_flow", n_partitions=6)
+    hists = [np.full(10, 0.1) for _ in range(6)]
+    hists[2] = np.eye(10)[0]              # partition 2 is single-class
+    sizes = [100, 200, 300, 400, 500, 600]
+    fleet, parts = world.fleet(hists, sizes)
+    assert len(fleet) == world.n_bound
+    for v, p in zip(fleet, parts):
+        assert v.data_size == sizes[p]
+        if p == 2:
+            assert v.emd == pytest.approx(1.8)           # 2*(Y-1)/Y
+        else:
+            assert v.emd == pytest.approx(0.0)
+        assert np.isfinite(v.gain_db)
+
+
+# ---------------------------------------------------------------------------
+# Mid-round dropout
+# ---------------------------------------------------------------------------
+def test_dropout_mask_boundary():
+    cfg = GenFVConfig()
+    half = mobility.coverage_half_length(cfg)
+
+    def veh(x, v):
+        return mobility.Vehicle(0, x, v, 1.0, 1.5e9, 1.3e9, 1.0, 100,
+                                np.full(10, .1), 0.0)
+
+    # 36 km/h = 10 m/s: 5 m from the exit edge -> gone in 0.5 s
+    fleet = [veh(half - 5.0, 36.0),       # exits mid-round
+             veh(-half + 5.0, 36.0),      # just entered, whole chord ahead
+             veh(half - 5.0, -36.0),      # near east edge but driving west
+             veh(half - 50.0, 36.0)]      # 5 s of headroom
+    surv = dropout_mask(cfg, fleet, [0, 1, 2, 3], t_round=3.0)
+    np.testing.assert_array_equal(surv, [False, True, True, True])
+    assert dropout_mask(cfg, fleet, [], 3.0).shape == (0,)
+
+
+def test_dropout_threaded_into_roundlog():
+    """A runner round where every selected vehicle is about to exit must
+    report them all as dropped and train nobody."""
+    run = RunConfig(strategy="fedavg", scenario="platoon", seed=0, **FAST)
+    r = GenFVRunner(run, fl_cfg=FAST_CFG)
+    st = r.world.state
+    half = mobility.coverage_half_length(r.cfg)
+    # teleport the whole platoon to 1 m before the exit edge at max speed
+    st.x[:] = np.sign(st.v) * (half - 1.0)
+    log = r.run_round(0)
+    assert log.dropped > 0
+    assert log.selected == 0              # nobody's update survived
+    assert log.dropped + log.selected <= len(st.x) + 1  # sanity
+
+
+# ---------------------------------------------------------------------------
+# Legacy equivalence + determinism guards
+# ---------------------------------------------------------------------------
+def test_legacy_scenario_reproduces_seed_stats():
+    """scenario="legacy" must reproduce the seed's memoryless per-round fleet
+    statistics exactly: same RNG draws -> same selection, delays, generation
+    schedule, and EMDs. Golden values recorded from this repo at the commit
+    introducing repro.sim, running the pre-sim round loop (loss/accuracy are
+    process-dependent through the procedural dataset's use of str hash(), so
+    only the fleet/plan statistics are pinned)."""
+    run = RunConfig(rounds=2, train_size=300, test_size=32, width_mult=0.0625,
+                    strategy="genfv", seed=1, scenario="legacy")
+    res = GenFVRunner(run, fl_cfg=FAST_CFG).train()
+    golden = [  # (selected, t_bar, b_gen, kappa2, emd_bar)
+        (4, 0.19567191773841125, 3, 0.37838433198970145, 1.2302590491269738),
+        (4, 0.19158312464063282, 3, 0.37838433198970145, 1.2302590491269738),
+    ]
+    for log, (sel, t_bar, b_gen, k2, emd_bar) in zip(res.logs, golden):
+        assert log.selected == sel
+        assert log.t_bar == pytest.approx(t_bar, rel=1e-9)
+        assert log.b_gen == b_gen
+        assert log.kappa2 == pytest.approx(k2, rel=1e-9)
+        assert log.emd_bar == pytest.approx(emd_bar, rel=1e-9)
+        assert log.dropped == 0           # legacy has no dropout semantics
+        assert np.isfinite(log.loss)
+
+
+def test_rush_hour_determinism_across_runners():
+    """Seeded 3-round rush_hour runs from two FRESH runners must produce
+    identical RoundLog curves: world stepping consumes RNG in a fixed order
+    and the fused fleet dispatch is deterministic on this backend."""
+    curves = []
+    for _ in range(2):
+        run = RunConfig(rounds=3, train_size=300, test_size=32,
+                        width_mult=0.0625, strategy="genfv", seed=0,
+                        scenario="rush_hour")
+        res = GenFVRunner(run, fl_cfg=FAST_CFG).train()
+        curves.append(res)
+    for key in ("selected", "dropped", "t_bar", "b_gen", "kappa2", "emd_bar",
+                "loss", "accuracy"):
+        np.testing.assert_array_equal(curves[0].curve(key),
+                                      curves[1].curve(key), err_msg=key)
+
+
+@pytest.mark.parametrize("scenario", ["highway_free_flow", "rush_hour",
+                                      "urban_stop_go", "platoon",
+                                      "sparse_rural"])
+def test_scenarios_end_to_end(scenario):
+    run = RunConfig(strategy="fl_only", scenario=scenario, seed=0, **FAST)
+    res = GenFVRunner(run, fl_cfg=FAST_CFG).train()
+    assert len(res.logs) == 1
+    log = res.logs[0]
+    assert np.isfinite(log.loss)
+    assert 0.0 <= log.accuracy <= 1.0
+    assert log.selected >= 0 and log.dropped >= 0
+
+
+# ---------------------------------------------------------------------------
+# Bench smoke (tier-1 wiring, mirroring bench_rounds --quick)
+# ---------------------------------------------------------------------------
+def test_bench_world_quick_smoke(tmp_path):
+    out = tmp_path / "BENCH_world.json"
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO_ROOT, "src") + os.pathsep + \
+        env.get("PYTHONPATH", "")
+    r = subprocess.run(
+        [sys.executable, "-m", "benchmarks.bench_world", "--quick",
+         "--out", str(out)],
+        cwd=REPO_ROOT, env=env, capture_output=True, text=True, timeout=540)
+    assert r.returncode == 0, r.stderr[-2000:]
+    data = json.loads(out.read_text())
+    assert data["quick"] is True
+    assert data["throughput"][0]["n_vehicles"] >= 10_000
+    assert data["throughput"][0]["vehicle_steps_per_sec"] > 0
+    assert data["throughput"][0]["mean_population"] > 5_000
+    assert len(data["scenarios"]) >= 1
+    row = data["scenarios"][0]
+    assert 0.0 <= row["final_accuracy"] <= 1.0
