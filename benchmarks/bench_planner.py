@@ -1,0 +1,139 @@
+"""Two-scale planner benchmark: jitted single-plan latency and vmapped
+multi-fleet throughput vs the numpy reference solver.
+
+Single-plan: one `plan_round` on an N=64 fleet, jax kernel vs numpy BCD —
+the jitted path must be no slower (acceptance bar) since the FL runner
+calls it every round.
+
+Batched: F independent fleets planned in ONE `plan_rounds_batched`
+dispatch vs F sequential numpy `plan_round` calls — the multi-seed /
+multi-strategy sweep shape (benchmarks/fig6-8, examples/scenario_sweep).
+Acceptance bar: >=5x at F>=8, N=64 on CPU.
+
+  PYTHONPATH=src python -m benchmarks.bench_planner [--quick] [--out PATH]
+
+Writes BENCH_planner.json (default: repo root) and prints the house
+``name,us_per_call,derived`` CSV lines. --quick shrinks to F=4 fleets and
+3 timing reps (tier-1 smoke: tests/test_planner.py).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.configs.base import GenFVConfig
+from repro.core import mobility
+from repro.core.two_scale import plan_round, plan_rounds_batched
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DEFAULT_OUT = os.path.join(REPO_ROOT, "BENCH_planner.json")
+MODEL_BITS = 11.2e6 * 32
+N_VEHICLES = 64
+BATCHES = 8
+
+
+def _fleet(seed: int, cfg: GenFVConfig):
+    rng = np.random.default_rng(seed)
+    hists = rng.dirichlet(np.full(10, 0.5), size=N_VEHICLES)
+    sizes = rng.integers(500, 2000, size=N_VEHICLES)
+    return mobility.sample_fleet(rng, cfg, hists, sizes)
+
+
+def _median_ms(fn, reps: int) -> float:
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts)) * 1e3
+
+
+def bench_single(cfg: GenFVConfig, reps: int) -> Dict:
+    fleet = _fleet(0, cfg)
+    k = len(plan_round(cfg, fleet, MODEL_BITS, BATCHES,
+                       planner="numpy").selected)
+    plan_round(cfg, fleet, MODEL_BITS, BATCHES, planner="jax")  # compile
+    jax_ms = _median_ms(
+        lambda: plan_round(cfg, fleet, MODEL_BITS, BATCHES, planner="jax"),
+        reps)
+    numpy_ms = _median_ms(
+        lambda: plan_round(cfg, fleet, MODEL_BITS, BATCHES, planner="numpy"),
+        reps)
+    row = {"n_vehicles": N_VEHICLES, "selected": k, "reps": reps,
+           "numpy_ms": numpy_ms, "jax_ms": jax_ms,
+           "speedup": numpy_ms / jax_ms}
+    emit("planner/single_plan", jax_ms * 1e3,
+         f"numpy_ms={numpy_ms:.3f} jax_ms={jax_ms:.3f} "
+         f"speedup={row['speedup']:.2f} K={k}")
+    return row
+
+
+def bench_batched(cfg: GenFVConfig, n_fleets: int, reps: int) -> Dict:
+    fleets = [_fleet(100 + s, cfg) for s in range(n_fleets)]
+    warm = plan_rounds_batched(cfg, fleets, MODEL_BITS, BATCHES)  # compile
+    ks = [len(p.selected) for p in warm]
+    jax_ms = _median_ms(
+        lambda: plan_rounds_batched(cfg, fleets, MODEL_BITS, BATCHES), reps)
+    numpy_ms = _median_ms(
+        lambda: [plan_round(cfg, f, MODEL_BITS, BATCHES, planner="numpy")
+                 for f in fleets], reps)
+    row = {"n_fleets": n_fleets, "n_vehicles": N_VEHICLES, "reps": reps,
+           "selected_per_fleet": ks,
+           "numpy_ms": numpy_ms, "jax_ms": jax_ms,
+           "numpy_plans_per_sec": n_fleets / (numpy_ms / 1e3),
+           "jax_plans_per_sec": n_fleets / (jax_ms / 1e3),
+           "speedup": numpy_ms / jax_ms}
+    emit(f"planner/batched_F{n_fleets}", jax_ms * 1e3 / n_fleets,
+         f"plans_per_sec={row['jax_plans_per_sec']:.0f} "
+         f"speedup={row['speedup']:.2f}x")
+    return row
+
+
+def run_bench(quick: bool = False) -> Dict:
+    cfg = GenFVConfig(num_vehicles=N_VEHICLES)
+    if quick:
+        reps, fleet_counts = 3, (4,)
+    else:
+        reps, fleet_counts = 15, (8, 16, 32)
+    out: Dict = {
+        "bench": "two-scale planner: jitted single-plan + vmapped batched",
+        "quick": quick,
+        "config": {"n_vehicles": N_VEHICLES, "model_bits": MODEL_BITS,
+                   "batches": BATCHES},
+        "single": bench_single(cfg, reps),
+        "batched": [bench_batched(cfg, f, reps) for f in fleet_counts],
+    }
+    return out
+
+
+def run(quick: bool = True) -> None:
+    """benchmarks.run entry point: quick CSV-only sweep."""
+    run_bench(quick=quick)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="small fleet count, few reps (tier-1 smoke)")
+    ap.add_argument("--out", default=DEFAULT_OUT,
+                    help=f"output JSON path (default {DEFAULT_OUT})")
+    args = ap.parse_args(argv)
+
+    with open(args.out, "a"):        # fail fast on an unwritable path
+        pass                         # (append probe: keep prior results)
+    print("name,us_per_call,derived")
+    res = run_bench(quick=args.quick)
+    with open(args.out, "w") as f:
+        json.dump(res, f, indent=2)
+    print(f"# wrote {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -10,9 +10,9 @@ import sys
 import time
 import traceback
 
-from benchmarks import (bench_rounds, bench_world, fig5_emd, fig6_selection,
-                        fig7_power, fig8_subproblems, fig9_generation,
-                        fig10_noniid, roofline, theorem1)
+from benchmarks import (bench_planner, bench_rounds, bench_world, fig5_emd,
+                        fig6_selection, fig7_power, fig8_subproblems,
+                        fig9_generation, fig10_noniid, roofline, theorem1)
 
 MODULES = {
     "fig5": fig5_emd.run,
@@ -25,6 +25,7 @@ MODULES = {
     "roofline": roofline.run,
     "rounds": bench_rounds.run,          # quick sweep; full: -m benchmarks.bench_rounds
     "world": bench_world.run,            # sim world; full: -m benchmarks.bench_world
+    "planner": bench_planner.run,        # two-scale planner; full: -m benchmarks.bench_planner
 }
 
 

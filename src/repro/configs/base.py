@@ -290,6 +290,18 @@ class GenFVConfig:
     # diffusion service
     diffusion_steps: int = 50         # I
     gen_batch: int = 64               # images per generation batch
+    # --- SUBP2-4 solver hyperparameters (Algorithms 1-3) -------------------
+    # Read by BOTH the numpy reference solvers (core/bandwidth.py,
+    # core/power.py) and the jitted batched planner (core/planner.py); the
+    # defaults reproduce the seed's hard-coded values bitwise.
+    bw_l_min: float = 0.05            # SUBP2 fractional-subcarrier floor
+    bw_step: float = 0.05             # Algorithm 1 subgradient step
+    bw_max_iter: int = 500            # Algorithm 1 iteration cap
+    bw_tol: float = 1e-5              # Algorithm 1 fixed-point tolerance
+    sca_max_iter: int = 50            # Algorithm 2 SCA iteration cap
+    sca_eps: float = 1e-4             # Algorithm 2 fixed-point tolerance
+    bcd_eps: float = 1e-3             # Algorithm 3 outer BCD tolerance
+    bcd_max_iter: int = 20            # Algorithm 3 outer BCD cap
     # --- repro.sim persistent-world layer (Sec. V-A2 made stateful) --------
     # Poisson arrival rate at the coverage edges (veh/s, both directions
     # combined). The default keeps the equilibrium population near

@@ -9,9 +9,11 @@ selection    SUBP1 + the four baseline selection policies
 bandwidth    SUBP2 Lagrange/KKT (Algorithm 1)
 power        SUBP3 SCA (Algorithm 2)
 generation   SUBP4 closed form (eq. 48)
+planner      batched/jitted XLA SUBP2-4 kernel + vmapped multi-fleet API
 two_scale    Algorithm 3 joint BCD loop -> RoundPlan
 """
 from repro.core import emd  # noqa: F401  (module; the emd() fn lives inside)
 from repro.core.emd import (aggregate, data_weights, emd_many, kappas,
                             label_histogram, mean_emd)
-from repro.core.two_scale import RoundPlan, plan_round
+from repro.core.planner import bucket_size
+from repro.core.two_scale import RoundPlan, plan_round, plan_rounds_batched

@@ -25,6 +25,37 @@ class BandwidthResult:
     converged: bool
 
 
+def project_budget(l: np.ndarray, M: float, l_min: float) -> np.ndarray:
+    """Project l onto {sum l <= M, l >= l_min} by iterated rescaling.
+
+    Precondition: the input already satisfies l >= l_min (solve_bandwidth
+    clips to [l_min, M] before projecting) — an already-under-budget input
+    is returned untouched, so entries below the floor stay there.
+
+    A single rescale `l * (M / sum(l))` followed by the l_min floor can
+    leave sum(l) > M when the floor binds on some entries after rescaling.
+    Water-fill instead: pin floored entries at l_min and rescale the rest
+    into the remaining budget until no new entry falls below the floor.
+    When no floor binds this is exactly the single rescale. If the budget
+    is infeasible (n * l_min > M) every entry pins at l_min — the floor
+    constraint wins, and sum(l) = n * l_min is the best achievable.
+    """
+    pinned = np.zeros(l.shape[0], bool)
+    for _ in range(l.shape[0]):
+        s_pin = l_min * float(np.count_nonzero(pinned))
+        s_free = float(l[~pinned].sum())
+        if s_pin + s_free <= M:
+            break
+        scale = max(M - s_pin, 0.0) / max(s_free, 1e-300)
+        l = np.where(pinned, l_min, l * scale)
+        newly = ~pinned & (l < l_min)
+        if not newly.any():
+            break
+        pinned |= newly
+        l = np.where(pinned, l_min, l)
+    return l
+
+
 def solve_bandwidth(A: np.ndarray, B: np.ndarray, C: np.ndarray,
                     D: np.ndarray, M: float, e_bar: float,
                     l_min: float = 0.05, step: float = 0.05,
@@ -43,10 +74,7 @@ def solve_bandwidth(A: np.ndarray, B: np.ndarray, C: np.ndarray,
         # eq. (38)
         l = np.sqrt((lam1 * B + lam2 * D) / max(lam3, 1e-9))
         l = np.clip(l, l_min, M)
-        # project onto the simplex-like budget sum l <= M (scale down)
-        s = l.sum()
-        if s > M:
-            l = np.maximum(l * (M / s), l_min)
+        l = project_budget(l, M, l_min)
         t_bar = float(np.max(A + B / l))
         # subgradient ascent on the multipliers (Algorithm 1 lines 2-4)
         g1 = A + B / l - t_bar                  # <=0 slack per vehicle

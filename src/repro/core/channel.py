@@ -52,3 +52,22 @@ def upload_energy(cfg: GenFVConfig, model_bits: float, l_n: float, phi: float,
                   dist: float, gain_db: float = 0.0) -> float:
     """Eq. (11)."""
     return float(phi * upload_time(cfg, model_bits, l_n, phi, dist, gain_db))
+
+
+# ---------------------------------------------------------------------------
+# Vectorized variants (array-level SUBP1 selection / batched planner). Same
+# float-op order as the scalar chain above, so results are bitwise equal
+# elementwise.
+# ---------------------------------------------------------------------------
+def snrs(cfg: GenFVConfig, phi, dist, gain_db=0.0) -> np.ndarray:
+    """Eq. (9) inner term over [N] arrays."""
+    h0 = cfg.unit_channel_gain * shadow_linear(gain_db)
+    return phi * h0 * np.asarray(dist, np.float64) ** (-cfg.path_loss_exp) \
+        / noise_watts(cfg)
+
+
+def upload_times(cfg: GenFVConfig, model_bits: float, l_n, phi, dist,
+                 gain_db=0.0) -> np.ndarray:
+    """Eq. (10) over [N] arrays."""
+    r = l_n * cfg.subcarrier_bw * np.log2(1.0 + snrs(cfg, phi, dist, gain_db))
+    return model_bits / np.maximum(r, 1e-9)

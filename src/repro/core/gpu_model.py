@@ -42,9 +42,34 @@ def train_energy(v: Vehicle, batches: int, c: GpuModelConsts = CONSTS) -> float:
     return runtime_power(v, c) * train_time(v, batches, c)
 
 
+# ---------------------------------------------------------------------------
+# Vectorized variants (array-level SUBP1 selection / batched planner). Same
+# float-op order as the scalar functions above, so results are bitwise equal
+# elementwise.
+# ---------------------------------------------------------------------------
+def train_times(f_mem, f_core, batches: int,
+                c: GpuModelConsts = CONSTS) -> "np.ndarray":
+    """Eq. (6) over [N] frequency arrays."""
+    return (c.t0 + c.c1 * batches * c.theta_mem / f_mem
+            + c.c2 * batches * c.theta_core / f_core)
+
+
+def runtime_powers(f_mem, f_core, v_core,
+                   c: GpuModelConsts = CONSTS) -> "np.ndarray":
+    """Eq. (7) over [N] capability arrays."""
+    return c.p_g0 + c.zeta_mem * f_mem + c.zeta_core * v_core ** 2 * f_core
+
+
+# RSU GPU: nominal vehicle-class core clock scaled by the Sec. IV-A5
+# speedup. Named so the jitted planner (core/planner.py) derives the same
+# eq. 13 constants as this reference instead of re-hard-coding them.
+RSU_F_CORE = 1.5e9
+RSU_SPEEDUP = 8.0
+
+
 def rsu_train_time(batches: int, c: GpuModelConsts = CONSTS,
-                   speedup: float = 8.0) -> float:
+                   speedup: float = RSU_SPEEDUP) -> float:
     """Eq. (13): augmented-model training on the RSU GPU (faster than
     vehicle GPUs by `speedup`)."""
     return (c.t0 + (c.c1 * batches * c.theta_mem + c.c2 * batches * c.theta_core)
-            / (1.5e9 * speedup))
+            / (RSU_F_CORE * speedup))

@@ -62,7 +62,8 @@ def solve_power(s_bits: float, l_w: np.ndarray, b_prime: np.ndarray,
     phi_max = np.broadcast_to(np.asarray(phi_max, np.float64), (n,))
     phi = np.full(n, phi_min, np.float64)
     it = 0
-    for it in range(1, max_iter + 1):
+    converged = False   # explicit: a fixed point reached exactly on the
+    for it in range(1, max_iter + 1):   # last iteration still counts
         e_i = e_of_phi(s_bits, l_w, b_prime, phi)
         de = e_prime(s_bits, l_w, b_prime, phi)
         # linearized budget: G + e_i + de*(phi_new - phi) <= e_bar
@@ -72,7 +73,8 @@ def solve_power(s_bits: float, l_w: np.ndarray, b_prime: np.ndarray,
         phi_new = np.clip(np.minimum(phi_budget, phi_max), phi_min, phi_max)
         if np.max(np.abs(phi_new - phi)) < eps:
             phi = phi_new
+            converged = True
             break
         phi = phi_new
     t_bar = float(np.max(t_of_phi(s_bits, l_w, b_prime, phi)))
-    return PowerResult(phi, t_bar, it, it < max_iter)
+    return PowerResult(phi, t_bar, it, converged)

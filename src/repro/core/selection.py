@@ -8,7 +8,7 @@ since bandwidth/power are only optimized for the *selected* set afterwards.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import List
 
 import numpy as np
@@ -24,38 +24,58 @@ class SelectionResult:
     t_bar: np.ndarray                # [N] per-vehicle deadline (eq. 27)
     t_cp: np.ndarray                 # nominal train time
     t_mu: np.ndarray                 # nominal upload time
-    reasons: List[str]               # why each vehicle was kept/dropped
     t_hold: np.ndarray | None = None  # [N] raw eq.-26 holding time (dropout
                                       # accounting: t_bar caps it at t_max)
+    # lazy reason strings: (vids, emds, emd_hat) kept so the per-vehicle
+    # explanation is only formatted when someone actually reads it (the hot
+    # planner path never does)
+    _reason_ctx: tuple | None = field(default=None, repr=False)
+    _reasons: List[str] | None = field(default=None, repr=False)
+
+    @property
+    def reasons(self) -> List[str]:
+        """Why each vehicle was kept/dropped (formatted on first access)."""
+        if self._reasons is None:
+            vids, emds, emd_hat = self._reason_ctx or ([], [], 0.0)
+            total = self.t_cp + self.t_mu
+            out = []
+            for i, vid in enumerate(vids):
+                if emds[i] > emd_hat:
+                    out.append(
+                        f"v{vid}: dropped (EMD {emds[i]:.2f} > {emd_hat})")
+                elif total[i] > self.t_bar[i]:
+                    out.append(f"v{vid}: dropped (T {total[i]:.2f}s > "
+                               f"Tbar {self.t_bar[i]:.2f}s)")
+                else:
+                    out.append(f"v{vid}: selected")
+            self._reasons = out
+        return self._reasons
 
 
 def select(cfg: GenFVConfig, fleet: List[Vehicle], model_bits: float,
            batches: int, emd_hat: float | None = None) -> SelectionResult:
     emd_hat = cfg.emd_threshold if emd_hat is None else emd_hat
-    n = len(fleet)
-    alpha = np.zeros(n, np.int32)
-    t_bar = np.zeros(n)
-    t_cp = np.zeros(n)
-    t_mu = np.zeros(n)
-    t_hold_arr = np.zeros(n)
-    reasons = []
-    for i, v in enumerate(fleet):
-        t_hold = mobility.holding_time(cfg, v.x, v.v)
-        t_hold_arr[i] = t_hold
-        t_bar[i] = min(t_hold, cfg.t_max)
-        t_cp[i] = gpu_model.train_time(v, batches)
-        d = mobility.rsu_distance(cfg, v.x)
-        t_mu[i] = channel.upload_time(cfg, model_bits, 1.0, v.phi_max, d,
-                                      gain_db=v.gain_db)
-        if v.emd > emd_hat:
-            reasons.append(f"v{v.vid}: dropped (EMD {v.emd:.2f} > {emd_hat})")
-        elif t_cp[i] + t_mu[i] > t_bar[i]:
-            reasons.append(
-                f"v{v.vid}: dropped (T {t_cp[i] + t_mu[i]:.2f}s > Tbar {t_bar[i]:.2f}s)")
-        else:
-            alpha[i] = 1
-            reasons.append(f"v{v.vid}: selected")
-    return SelectionResult(alpha, t_bar, t_cp, t_mu, reasons, t_hold_arr)
+    xs = np.array([v.x for v in fleet], np.float64)
+    vs = np.array([v.v for v in fleet], np.float64)
+    phi_max = np.array([v.phi_max for v in fleet], np.float64)
+    f_mem = np.array([v.f_mem for v in fleet], np.float64)
+    f_core = np.array([v.f_core for v in fleet], np.float64)
+    gain_db = np.array([v.gain_db for v in fleet], np.float64)
+    emds = np.array([v.emd for v in fleet], np.float64)
+    vids = [v.vid for v in fleet]
+
+    # eq. 26-27 deadline + nominal single-subcarrier/max-power budget, all
+    # array-level (the vectorized helpers mirror the scalar float-op order,
+    # so alpha is bitwise-identical to the per-vehicle reference loop)
+    t_hold = mobility.holding_times(cfg, xs, vs)
+    t_bar = np.minimum(t_hold, cfg.t_max)
+    t_cp = gpu_model.train_times(f_mem, f_core, batches)
+    dists = mobility.rsu_distances(cfg, xs)
+    t_mu = channel.upload_times(cfg, model_bits, 1.0, phi_max, dists,
+                                gain_db=gain_db)
+    alpha = (~(emds > emd_hat) & ~(t_cp + t_mu > t_bar)).astype(np.int32)
+    return SelectionResult(alpha, t_bar, t_cp, t_mu, t_hold,
+                           _reason_ctx=(vids, emds, emd_hat))
 
 
 def dropout_mask(cfg: GenFVConfig, fleet: List[Vehicle],

@@ -8,46 +8,45 @@ Small computation scale:   BCD over SUBP2 (bandwidth) -> SUBP3 (power)
 Outputs a `RoundPlan`: who participates, their subcarriers/powers, the
 number of images the RSU generates, and the full delay/energy ledger that
 the FL runtime uses as the simulated round clock.
+
+Two backends solve the small scale:
+  planner="jax"   (default) — the jitted/batched XLA kernel in
+                  core/planner.py (lax.while_loop BCD, bucket-padded).
+  planner="numpy" — the host reference loop below; it pins the paper math
+                  and the equivalence tests (tests/test_planner.py) hold
+                  the jax backend to it.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
 from typing import List
 
 import numpy as np
 
 from repro.configs.base import GenFVConfig
 from repro.core import bandwidth as bw
-from repro.core import channel, gpu_model, power as pw
-from repro.core.generation import DiffusionService, inference_time, optimal_generation
+from repro.core import power as pw
+from repro.core.generation import DiffusionService, inference_time, \
+    optimal_generation
 from repro.core.gpu_model import rsu_train_time
-from repro.core.mobility import Vehicle, rsu_distances
-from repro.core.selection import SelectionResult, select
+from repro.core.mobility import Vehicle
+from repro.core.planner import (RoundPlan, empty_plan, plan_rounds_batched,
+                                plan_selected_jax, selected_consts)
+from repro.core.selection import select
 
-
-@dataclass
-class RoundPlan:
-    alpha: np.ndarray                 # [N] selection indicator
-    selected: List[int]               # indices with alpha=1
-    l: np.ndarray                     # [K] subcarriers per selected vehicle
-    phi: np.ndarray                   # [K] tx power per selected vehicle
-    b_gen: int                        # images to generate (SUBP4)
-    t_cp: np.ndarray                  # [K] per-vehicle training delay
-    t_mu: np.ndarray                  # [K] per-vehicle upload delay
-    t_bar: float                      # max_n (t_cp + t_mu) — system delay
-    e_total: np.ndarray               # [K] per-vehicle energy
-    t_rsu: float                      # RSU generation + augmentation time
-    bcd_iters: int = 0
-    history: List[float] = field(default_factory=list)   # T_bar per BCD iter
-    selection: SelectionResult | None = None
+__all__ = ["RoundPlan", "plan_round", "plan_rounds_batched"]
 
 
 def plan_round(cfg: GenFVConfig, fleet: List[Vehicle], model_bits: float,
                batches: int, b_prev: int = 0,
                svc: DiffusionService | None = None,
-               eps: float = 1e-3, max_bcd: int = 20,
-               alpha_override: np.ndarray | None = None) -> RoundPlan:
+               eps: float | None = None, max_bcd: int | None = None,
+               alpha_override: np.ndarray | None = None,
+               planner: str = "jax") -> RoundPlan:
     svc = svc or DiffusionService(steps=cfg.diffusion_steps)
+    eps = cfg.bcd_eps if eps is None else eps
+    max_bcd = cfg.bcd_max_iter if max_bcd is None else max_bcd
+    if planner not in ("jax", "numpy"):
+        raise ValueError(f"unknown planner {planner!r}")
 
     # ---- Large communication scale: label share + SUBP1 ------------------
     # With an alpha_override the caller already ran strategy-specific
@@ -61,27 +60,24 @@ def plan_round(cfg: GenFVConfig, fleet: List[Vehicle], model_bits: float,
         alpha = np.asarray(alpha_override)
     idx = [i for i in range(len(fleet)) if alpha[i] == 1]
     if not idx:
-        return RoundPlan(alpha, [], np.zeros(0), np.zeros(0), 0,
-                         np.zeros(0), np.zeros(0), 0.0, np.zeros(0), 0.0,
-                         selection=sel)
-    sub = [fleet[i] for i in idx]
-    K = len(sub)
+        return empty_plan(alpha, sel)
 
-    # ---- constants per selected vehicle ----------------------------------
-    dists = rsu_distances(cfg, np.array([v.x for v in sub]))
-    t_cp = np.array([gpu_model.train_time(v, batches) for v in sub])   # A
-    p_run = np.array([gpu_model.runtime_power(v) for v in sub])
-    e_cp = p_run * t_cp                                                # C (per =G)
-    n0 = channel.noise_watts(cfg)
-    # per-vehicle shadowed channel gain (legacy fleets carry gain_db=0, where
-    # the 10^(0/10)=1.0 multiplier reproduces the unshadowed value bitwise)
-    shadow = channel.shadow_linear(np.array([v.gain_db for v in sub]))
-    b_prime = (cfg.unit_channel_gain * shadow
-               * dists ** (-cfg.path_loss_exp) / n0)
+    # ---- constants per selected vehicle (hoisted out of the BCD) ---------
+    c = selected_consts(cfg, fleet, idx, batches)
 
     # ---- Small computation scale: BCD over SUBP2/3/4 ----------------------
+    if planner == "jax":
+        r = plan_selected_jax(cfg, model_bits, c, b_prev, svc, eps, max_bcd)
+        return RoundPlan(alpha=alpha, selected=idx, l=r["l"], phi=r["phi"],
+                         b_gen=r["b_gen"], t_cp=c.t_cp, t_mu=r["t_mu"],
+                         t_bar=r["t_bar"], e_total=c.e_cp + r["e_mu"],
+                         t_rsu=r["t_rsu"], bcd_iters=r["bcd_iters"],
+                         history=r["history"], selection=sel)
+
+    K = len(idx)
+    t_cp, e_cp, b_prime, phi_max = c.t_cp, c.e_cp, c.b_prime, c.phi_max
     l = bw.equal_share(K, cfg.num_subcarriers)
-    phi = np.array([v.phi_max for v in sub])
+    phi = phi_max.copy()
     b_gen = b_prev
     history: List[float] = []
     it = 0
@@ -93,13 +89,15 @@ def plan_round(cfg: GenFVConfig, fleet: List[Vehicle], model_bits: float,
         B = model_bits / rate_1sub                 # T_mu = B / l_n
         D = phi * B                                # E_mu = D / l_n
         res2 = bw.solve_bandwidth(t_cp, B, e_cp, D, cfg.num_subcarriers,
-                                  cfg.e_max)
+                                  cfg.e_max, l_min=cfg.bw_l_min,
+                                  step=cfg.bw_step, max_iter=cfg.bw_max_iter,
+                                  tol=cfg.bw_tol)
         l = res2.l
 
         # SUBP3: power given l, b
         res3 = pw.solve_power(model_bits, l * cfg.subcarrier_bw, b_prime,
-                              e_cp, cfg.e_max, cfg.phi_min,
-                              np.array([v.phi_max for v in sub]))
+                              e_cp, cfg.e_max, cfg.phi_min, phi_max,
+                              max_iter=cfg.sca_max_iter, eps=cfg.sca_eps)
         phi = res3.phi
 
         # SUBP4: generation given l, phi (closed form, eq. 48)

@@ -36,24 +36,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.emd import aggregate_stacked, kappas
+# one bucket scheme for every padded dispatch in the repo: the fleet engine
+# and the batched planner share it (defined in core/planner.py; re-exported
+# here for existing callers)
+from repro.core.planner import bucket_size  # noqa: F401
 from repro.fl.client import local_sgd_steps
-
-
-def bucket_size(k: int, min_bucket: int = 4, max_bucket: int = 4096) -> int:
-    """Smallest power-of-two >= k (clamped to [min_bucket, max_bucket]).
-
-    The floor is 4: XLA:CPU's conv kernels switch strategy at very small
-    batch sizes, so a K=2 fleet executed in bucket 2 drifts ~1 ULP from the
-    same fleet in bucket 8, while the bucket family {4, 8, 16, ...} is
-    bitwise-consistent (tests/test_fleet.py). Padding 1-3 vehicles up to 4
-    costs negligible throwaway compute.
-    """
-    if k > max_bucket:
-        raise ValueError(f"fleet of {k} exceeds max bucket {max_bucket}")
-    b = max(int(min_bucket), 1)
-    while b < k:
-        b *= 2
-    return b
 
 
 def _fleet_step_impl(cfg, h: int, lr: float, prox_mu: float, global_params,

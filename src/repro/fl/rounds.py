@@ -58,6 +58,9 @@ class RunConfig:
     # Fleet source: a repro.sim scenario name (persistent world, default) or
     # "legacy" for the seed's memoryless per-round i.i.d. sampler.
     scenario: str = "highway_free_flow"
+    # SUBP2-4 backend: "jax" (jitted/batched XLA kernel, default) or
+    # "numpy" (host reference solver; pins the paper math bit-for-bit)
+    planner: str = "jax"
 
 
 @dataclass
@@ -172,7 +175,8 @@ class GenFVRunner:
 
         alpha = self._alpha(fleet, t) if fleet else np.zeros(0, np.int32)
         plan = plan_round(cfg, fleet, self.model_bits, cfg.local_steps,
-                          b_prev=self.b_prev, alpha_override=alpha)
+                          b_prev=self.b_prev, alpha_override=alpha,
+                          planner=run.planner)
         self.b_prev = plan.b_gen
 
         # Mid-round dropout (persistent world only): SUBP1 admitted against

@@ -206,6 +206,43 @@ def test_bandwidth_respects_budget_and_helps_stragglers():
     assert res.t_bar <= eq + 1e-6
 
 
+def test_project_budget_iterates_when_floor_binds():
+    """Regression: a single rescale + floor can overshoot the budget. With
+    l = [10, 0.06, 0.06], M = 5: one rescale gives [4.94, ~0.03, ~0.03],
+    flooring the small entries to 0.05 pushes the sum to 5.04 > M. The
+    iterated projection pins them and refills the free entry instead."""
+    l = bw.project_budget(np.array([10.0, 0.06, 0.06]), M=5.0, l_min=0.05)
+    assert l.sum() <= 5.0 + 1e-9
+    np.testing.assert_allclose(l, [4.9, 0.05, 0.05])
+    # no-bind case: plain rescale, already-feasible input untouched
+    np.testing.assert_allclose(
+        bw.project_budget(np.array([4.0, 4.0]), 4.0, 0.05), [2.0, 2.0])
+    easy = np.array([1.0, 2.0])
+    np.testing.assert_array_equal(bw.project_budget(easy, 4.0, 0.05), easy)
+    # infeasible budget: every entry pins at the floor (documented)
+    np.testing.assert_allclose(
+        bw.project_budget(np.array([1.0, 1.0, 1.0]), 0.1, 0.05), 0.05)
+
+
+def test_bandwidth_budget_property_randomized(rng):
+    """Property: across random A/B/C/D instances the returned allocation
+    always satisfies sum(l) <= M and l >= l_min (the pre-fix projection
+    violated the budget whenever the floor bound after rescaling)."""
+    for _ in range(40):
+        n = int(rng.integers(1, 24))
+        A = rng.uniform(0.0, 1.0, n)
+        B = 10.0 ** rng.uniform(-3, 2, n)          # wildly mixed channels
+        C = rng.uniform(0.0, 2.0, n)
+        D = rng.uniform(0.0, 2.0, n) * B
+        l_min = 0.05
+        M = float(rng.uniform(n * l_min * 1.01, 20.0))
+        res = bw.solve_bandwidth(A, B, C, D, M=M,
+                                 e_bar=float(rng.uniform(0.5, 20.0)),
+                                 l_min=l_min)
+        assert res.l.sum() <= M + 1e-9, (n, M, res.l.sum())
+        assert np.all(res.l >= l_min - 1e-12)
+
+
 # ---------------------------------------------------------------------------
 # SUBP3 power (Alg. 2)
 # ---------------------------------------------------------------------------
@@ -231,6 +268,26 @@ def test_power_sca_respects_energy():
     t = pw.t_of_phi(3e8, l_w, b_prime, res.phi)
     t_min = pw.t_of_phi(3e8, l_w, b_prime, np.full(2, 0.05))
     assert np.all(t <= t_min)
+
+
+def test_power_converged_flag_exact_on_last_iteration():
+    """Regression: a solve hitting the eps fixed point exactly on iteration
+    max_iter used to report converged=False (the flag was `it < max_iter`).
+    Re-running with max_iter pinned to the iteration that converged must
+    still report success."""
+    l_w = np.full(3, 2e7)
+    b_prime = np.full(3, 1e4)
+    G = np.zeros(3)
+    free = pw.solve_power(1e8, l_w, b_prime, G, e_bar=100.0, phi_min=0.1,
+                          phi_max=1.0)
+    assert free.converged and free.iters >= 2
+    pinned = pw.solve_power(1e8, l_w, b_prime, G, e_bar=100.0, phi_min=0.1,
+                            phi_max=1.0, max_iter=free.iters)
+    assert pinned.converged
+    np.testing.assert_array_equal(pinned.phi, free.phi)
+    # a cap genuinely too small still reports non-convergence
+    assert not pw.solve_power(1e8, l_w, b_prime, G, 100.0, 0.1, 1.0,
+                              max_iter=1).converged
 
 
 # ---------------------------------------------------------------------------
@@ -270,6 +327,21 @@ def test_selection_emd_threshold(rng):
     np.testing.assert_allclose(res.t_bar, np.minimum(res.t_hold, CFG.t_max))
     loose = select(CFG, fleet, model_bits=1e6, batches=4, emd_hat=10.0)
     assert loose.alpha.sum() >= res.alpha.sum()
+
+
+def test_selection_reasons_lazy_and_consistent(rng):
+    """reasons are formatted on first access only, and agree with alpha."""
+    fleet = _fleet(rng, n=12)
+    res = select(CFG, fleet, model_bits=352e6, batches=8, emd_hat=0.9)
+    assert res._reasons is None                    # nothing formatted yet
+    reasons = res.reasons
+    assert res._reasons is reasons                 # cached after first use
+    assert len(reasons) == len(fleet)
+    for v, a, r in zip(fleet, res.alpha, reasons):
+        assert r.startswith(f"v{v.vid}: ")
+        assert ("selected" in r) == bool(a)
+        if v.emd > 0.9:
+            assert "EMD" in r
 
 
 def test_no_emd_superset(rng):

@@ -1,0 +1,196 @@
+"""Batched XLA planner (core/planner.py): numpy-reference equivalence on
+every registered scenario + legacy, vmapped-batched == single-plan
+bitwise consistency, end-to-end runner parity, and the bench smoke.
+
+Documented tolerances (DESIGN.md §"Batched XLA planner"): alpha is
+bitwise-equal (SUBP1 is shared); l/phi/t_bar agree within the BCD
+fixed-point tolerance bcd_eps=1e-3 (measured drift is ~bw_tol=1e-5, from
+convergence checks straddling an iteration boundary); b_gen within 1.
+"""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.configs.base import GenFVConfig
+from repro.core import mobility
+from repro.core.planner import bucket_size, plan_selected_jax, \
+    selected_consts
+from repro.core.two_scale import plan_round, plan_rounds_batched
+from repro.sim import SCENARIOS, VehicularWorld, get_scenario
+
+REPO_ROOT = os.path.join(os.path.dirname(__file__), "..")
+MODEL_BITS = 11.2e6 * 32
+
+L_ATOL = 1e-3        # == bcd_eps: one outer fixed-point step
+PHI_ATOL = 1e-3
+TBAR_ATOL = 1e-3
+
+
+def _legacy_fleets(rng, cfg, n=40, rounds=3):
+    hists = rng.dirichlet(np.full(10, 0.3), size=n)
+    sizes = rng.integers(500, 2000, size=n)
+    return [mobility.sample_fleet(rng, cfg, hists, sizes)
+            for _ in range(rounds)]
+
+
+def _world_fleets(name, rng, cfg, n=40, rounds=3):
+    hists = rng.dirichlet(np.full(10, 0.3), size=n)
+    sizes = rng.integers(500, 2000, size=n)
+    world = VehicularWorld(cfg, get_scenario(name), n_partitions=n, rng=rng)
+    fleets = []
+    for _ in range(rounds):
+        fleets.append(world.fleet(hists, sizes)[0])
+        world.step(rng, 2.0)
+    return fleets
+
+
+@pytest.mark.parametrize("scenario", sorted(SCENARIOS) + ["legacy"])
+def test_planner_equivalence(scenario):
+    """Seeded 3-round plan chains (b_prev threaded like the runner does):
+    the jitted planner must match the numpy reference on every scenario."""
+    rng = np.random.default_rng(7)
+    if scenario == "legacy":
+        cfg = GenFVConfig()
+        fleets = _legacy_fleets(rng, cfg)
+    else:
+        cfg = get_scenario(scenario).apply(GenFVConfig())
+        fleets = _world_fleets(scenario, rng, cfg)
+    b_prev = 0
+    planned = 0
+    for fleet in fleets:
+        pn = plan_round(cfg, fleet, MODEL_BITS, batches=8, b_prev=b_prev,
+                        planner="numpy")
+        pj = plan_round(cfg, fleet, MODEL_BITS, batches=8, b_prev=b_prev,
+                        planner="jax")
+        np.testing.assert_array_equal(pn.alpha, pj.alpha)   # SUBP1 bitwise
+        assert pn.selected == pj.selected
+        if not pn.selected:
+            continue
+        planned += 1
+        np.testing.assert_allclose(pj.l, pn.l, atol=L_ATOL)
+        np.testing.assert_allclose(pj.phi, pn.phi, atol=PHI_ATOL)
+        np.testing.assert_allclose(pj.t_mu, pn.t_mu, atol=TBAR_ATOL)
+        assert pj.t_bar == pytest.approx(pn.t_bar, abs=TBAR_ATOL)
+        assert abs(pj.b_gen - pn.b_gen) <= 1
+        np.testing.assert_array_equal(pn.t_cp, pj.t_cp)     # shared consts
+        assert len(pj.history) == pj.bcd_iters
+        b_prev = pn.b_gen
+    assert planned >= 1          # the draw must exercise the BCD
+
+
+def test_batched_matches_single_bitwise():
+    """plan_rounds_batched == per-fleet plan_round(planner="jax") exactly:
+    the done-guarded while loops freeze converged lanes, so extra vmap
+    iterations are no-ops even across different selected-set sizes."""
+    cfg = GenFVConfig()
+    fleets = []
+    for s in (0, 1, 2):
+        rng = np.random.default_rng(200 + s)
+        hists = rng.dirichlet(np.full(10, 0.4), size=12 * (s + 1))
+        sizes = rng.integers(500, 2000, size=12 * (s + 1))
+        fleets.append(mobility.sample_fleet(rng, cfg, hists, sizes))
+    batched = plan_rounds_batched(cfg, fleets, MODEL_BITS, batches=8,
+                                  b_prevs=[0, 5, 64])
+    ks = {len(p.selected) for p in batched}
+    assert len(ks) > 1           # the point: heterogeneous K in one dispatch
+    for fleet, b_prev, bp in zip(fleets, [0, 5, 64], batched):
+        single = plan_round(cfg, fleet, MODEL_BITS, batches=8,
+                            b_prev=b_prev, planner="jax")
+        np.testing.assert_array_equal(single.alpha, bp.alpha)
+        np.testing.assert_array_equal(single.l, bp.l)
+        np.testing.assert_array_equal(single.phi, bp.phi)
+        np.testing.assert_array_equal(single.t_mu, bp.t_mu)
+        assert single.t_bar == bp.t_bar
+        assert single.b_gen == bp.b_gen
+        assert single.t_rsu == bp.t_rsu
+        assert single.bcd_iters == bp.bcd_iters
+        assert single.history == bp.history
+
+
+def test_bucket_padding_invariant():
+    """Padding the same selected set into a LARGER bucket must not change
+    the plan at all: padded slots carry zero subcarriers / False masks."""
+    cfg = GenFVConfig()
+    rng = np.random.default_rng(11)
+    hists = rng.dirichlet(np.full(10, 0.4), size=20)
+    sizes = rng.integers(500, 2000, size=20)
+    fleet = mobility.sample_fleet(rng, cfg, hists, sizes)
+    plan = plan_round(cfg, fleet, MODEL_BITS, batches=8, planner="jax")
+    k = len(plan.selected)
+    if k == 0:
+        pytest.skip("no vehicles selected in this draw")
+    from repro.core.generation import DiffusionService
+    consts = selected_consts(cfg, fleet, plan.selected, 8)
+    svc = DiffusionService(steps=cfg.diffusion_steps)
+    base = plan_selected_jax(cfg, MODEL_BITS, consts, 0, svc,
+                             cfg.bcd_eps, cfg.bcd_max_iter)
+    bigger = plan_selected_jax(cfg, MODEL_BITS, consts, 0, svc,
+                               cfg.bcd_eps, cfg.bcd_max_iter,
+                               bucket=4 * bucket_size(k))
+    for key in ("l", "phi", "t_mu", "e_mu"):
+        np.testing.assert_array_equal(bigger[key], base[key], err_msg=key)
+    for key in ("t_bar", "b_gen", "t_rsu", "bcd_iters", "history"):
+        assert bigger[key] == base[key], key
+
+
+def test_empty_selection_both_backends():
+    cfg = GenFVConfig()
+    rng = np.random.default_rng(0)
+    hists = rng.dirichlet(np.full(10, 0.4), size=6)
+    sizes = rng.integers(500, 2000, size=6)
+    fleet = mobility.sample_fleet(rng, cfg, hists, sizes)
+    override = np.zeros(len(fleet), np.int32)
+    for planner in ("numpy", "jax"):
+        plan = plan_round(cfg, fleet, MODEL_BITS, batches=8,
+                          alpha_override=override, planner=planner)
+        assert plan.selected == [] and plan.b_gen == 0
+        assert plan.l.shape == (0,) and plan.t_bar == 0.0
+    with pytest.raises(ValueError, match="unknown planner"):
+        plan_round(cfg, fleet, MODEL_BITS, batches=8, planner="torch")
+
+
+def test_runner_end_to_end_planner_parity():
+    """Seeded rush_hour runs: the jax-planner curves must match the
+    numpy-planner run within noise (acceptance bar). Integer decisions
+    (selection counts, generation schedule) must agree exactly; accuracy
+    may drift only through sub-tolerance t_bar differences feeding the
+    world clock."""
+    from repro.fl.rounds import GenFVRunner, RunConfig
+    curves = {}
+    for planner in ("numpy", "jax"):
+        run = RunConfig(rounds=3, train_size=300, test_size=32,
+                        width_mult=0.0625, strategy="genfv", seed=0,
+                        scenario="rush_hour", planner=planner)
+        cfg = GenFVConfig(batch_size=8, local_steps=2, num_vehicles=6)
+        curves[planner] = GenFVRunner(run, fl_cfg=cfg).train()
+    for key in ("selected", "b_gen", "dropped"):
+        np.testing.assert_array_equal(curves["numpy"].curve(key),
+                                      curves["jax"].curve(key), err_msg=key)
+    np.testing.assert_allclose(curves["jax"].curve("t_bar"),
+                               curves["numpy"].curve("t_bar"),
+                               atol=TBAR_ATOL)
+    np.testing.assert_allclose(curves["jax"].curve("accuracy"),
+                               curves["numpy"].curve("accuracy"), atol=0.1)
+
+
+# ---------------------------------------------------------------------------
+# Bench smoke (tier-1 wiring, mirroring bench_world --quick)
+# ---------------------------------------------------------------------------
+def test_bench_planner_quick_smoke(tmp_path):
+    out = tmp_path / "BENCH_planner.json"
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO_ROOT, "src") + os.pathsep + \
+        env.get("PYTHONPATH", "")
+    r = subprocess.run(
+        [sys.executable, "-m", "benchmarks.bench_planner", "--quick",
+         "--out", str(out)],
+        cwd=REPO_ROOT, env=env, capture_output=True, text=True, timeout=600)
+    assert r.returncode == 0, r.stderr
+    import json
+    res = json.loads(out.read_text())
+    assert res["quick"] is True
+    assert res["single"]["jax_ms"] > 0
+    assert res["batched"][0]["speedup"] > 0
