@@ -1,0 +1,114 @@
+"""repro.exp sweep benchmark: batched grid execution vs per-cell runners.
+
+Runs the same strategy x scenario grid twice — once through `Sweep.run()`
+(shared datasets/engines, one batched SUBP2-4 dispatch per planning group
+per round) and once as independent `GenFVRunner.train()` calls — verifies
+the curves agree bitwise (the executor's core guarantee), and reports the
+wall-clock ratio plus the sharing counters.
+
+  PYTHONPATH=src python -m benchmarks.bench_sweep [--quick] [--out PATH]
+
+Writes BENCH_sweep.json (default: repo root) and prints the house
+``name,us_per_call,derived`` CSV lines. --quick shrinks to a 2-cell x
+2-round grid on a tiny train set (tier-1: tests/test_exp.py).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.configs.base import GenFVConfig
+from repro.exp import ExperimentSpec, Sweep
+from repro.fl.rounds import GenFVRunner, RunConfig
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DEFAULT_OUT = os.path.join(REPO_ROOT, "BENCH_sweep.json")
+
+
+def make_spec(quick: bool) -> ExperimentSpec:
+    if quick:
+        return ExperimentSpec(
+            name="bench_sweep_quick",
+            strategies=("genfv", "fl_only"),
+            scenarios=("rush_hour",),
+            base=RunConfig(rounds=2, train_size=300, test_size=32,
+                           width_mult=0.0625))
+    return ExperimentSpec(
+        name="bench_sweep",
+        strategies=("genfv", "fedavg", "no_emd", "fl_only"),
+        scenarios=("highway_free_flow", "rush_hour"),
+        seeds=(0, 1),
+        base=RunConfig(rounds=6, train_size=600, test_size=64,
+                       width_mult=0.0625))
+
+
+def fl_cfg(quick: bool) -> GenFVConfig:
+    return GenFVConfig(batch_size=8, local_steps=2,
+                       num_vehicles=6 if quick else 10)
+
+
+def run(quick: bool = True, out: str | None = None) -> dict:
+    spec = make_spec(quick)
+    cfg = fl_cfg(quick)
+    cells = spec.expand()
+
+    # warmup: one throwaway sweep compiles every jit bucket both paths use
+    Sweep(spec, fl_cfg=cfg).run()
+
+    t0 = time.perf_counter()
+    result = Sweep(spec, fl_cfg=cfg).run()
+    t_sweep = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    singles = [GenFVRunner(c.run, fl_cfg=cfg).train() for c in cells]
+    t_single = time.perf_counter() - t0
+
+    mismatches = 0
+    for c, single in zip(cells, singles):
+        for key in ("loss", "accuracy", "t_bar"):
+            if not np.array_equal(result.metrics[key][c.index],
+                                  single.curve(key)):
+                mismatches += 1
+    speedup = t_single / t_sweep
+
+    emit(f"sweep/{'quick' if quick else 'full'}_grid",
+         t_sweep * 1e6 / spec.n_cells,
+         f"cells={spec.n_cells} speedup={speedup:.2f}x "
+         f"bitwise_parity={mismatches == 0} "
+         f"dispatches={result.meta['planner_dispatches']} "
+         f"largest_batch={result.meta['planner_largest_batch']} "
+         f"dataset_builds={result.meta['dataset_builds']}")
+
+    doc = {
+        "bench": "repro.exp sweep vs per-cell runners",
+        "quick": quick,
+        "n_cells": spec.n_cells,
+        "rounds": cells[0].run.rounds,
+        "t_sweep_s": t_sweep,
+        "t_single_s": t_single,
+        "speedup": speedup,
+        "bitwise_parity": mismatches == 0,
+        "meta": result.meta,
+    }
+    path = out or DEFAULT_OUT
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1)
+    return doc
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    doc = run(quick=args.quick, out=args.out)
+    return 0 if doc["bitwise_parity"] else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

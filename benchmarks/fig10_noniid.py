@@ -1,6 +1,10 @@
 """Fig. 10/11/12: accuracy under different Dirichlet distributions for
 GenFV vs FL-only vs AIGC-only, across the three datasets.
 
+One `repro.exp` sweep per dataset (scheme x alpha grid): cells share the
+dataset builds, one FleetEngine per CNN shape, and one batched SUBP2-4
+dispatch per round across all schemes/alphas of the dataset.
+
 Paper claims validated (orderings/trends, DESIGN.md §2):
   * FL-only improves with alpha (less heterogeneity -> better);
   * GenFV >= FL-only, with the largest gap at small alpha;
@@ -9,55 +13,56 @@ cifar10 runs the fuller alpha sweep; cifar100/gtsrb run the endpoints.
 """
 from __future__ import annotations
 
-import json
 import time
 
 import numpy as np
 
-from benchmarks.common import ART, emit, ensure_art
+from benchmarks.common import emit
 from repro.configs.base import GenFVConfig
-from repro.fl.rounds import GenFVRunner, RunConfig
+from repro.exp import ExperimentSpec, Sweep
+from repro.fl.rounds import RunConfig
 
 SCHEMES = ("genfv", "fl_only", "aigc_only")
 
 
-def one(dataset: str, alpha: float, scheme: str, rounds: int):
-    fl_cfg = GenFVConfig(batch_size=32, local_steps=8, num_vehicles=12)
-    r = GenFVRunner(RunConfig(dataset=dataset, alpha=alpha, rounds=rounds,
-                              strategy=scheme, train_size=2000,
-                              test_size=160, width_mult=0.125, seed=5,
-                              model_bits=11.2e6 * 32), fl_cfg=fl_cfg)
-    return r.train().curve("accuracy")
-
-
 def run(rounds: int = 24) -> None:
-    ensure_art()
     plan = {"cifar10": (0.1, 1.0), "cifar100": (0.1,), "gtsrb": (0.1,)}
+    fl_cfg = GenFVConfig(batch_size=32, local_steps=8, num_vehicles=12)
     results = {}
     for dataset, alphas in plan.items():
+        spec = ExperimentSpec(
+            name=f"fig10_noniid_{dataset}",
+            strategies=SCHEMES,
+            alphas=alphas,
+            base=RunConfig(dataset=dataset, rounds=rounds, train_size=2000,
+                           test_size=160, width_mult=0.125, seed=5,
+                           model_bits=11.2e6 * 32),
+        )
+        t0 = time.perf_counter()
+        res = Sweep(spec, fl_cfg=fl_cfg).run()
+        dt = (time.perf_counter() - t0) * 1e6 / (rounds * spec.n_cells)
+        res.save()
+        results[dataset] = res
         for alpha in alphas:
             for scheme in SCHEMES:
-                t0 = time.perf_counter()
-                acc = one(dataset, alpha, scheme, rounds)
-                results[f"{dataset}/a{alpha}/{scheme}"] = acc.tolist()
-                emit(f"fig10_noniid/{dataset}/alpha{alpha}/{scheme}",
-                     (time.perf_counter() - t0) * 1e6 / rounds,
+                acc = res.curve("accuracy", strategy=scheme, alpha=alpha)
+                emit(f"fig10_noniid/{dataset}/alpha{alpha}/{scheme}", dt,
                      f"final_acc={acc[-1]:.3f} best={acc.max():.3f}")
-    with open(f"{ART}/fig10_noniid.json", "w") as f:
-        json.dump(results, f, indent=1)
 
     # trend summaries
     for dataset, alphas in plan.items():
+        res = results[dataset]
         lo, hi = min(alphas), max(alphas)
-        fl_lo = np.mean(results[f"{dataset}/a{lo}/fl_only"][-3:])
-        gv_lo = np.mean(results[f"{dataset}/a{lo}/genfv"][-3:])
-        ai = results[f"{dataset}/a{lo}/aigc_only"]
+        fl_lo = res.curve("accuracy", strategy="fl_only", alpha=lo)[-3:].mean()
+        gv_lo = res.curve("accuracy", strategy="genfv", alpha=lo)[-3:].mean()
+        ai = res.curve("accuracy", strategy="aigc_only", alpha=lo)
         aigc_plateau = np.mean(ai[-5:]) <= max(ai) + 0.02 and \
             np.mean(ai[-5:]) - np.mean(ai[len(ai) // 2:len(ai) // 2 + 5]) < 0.1
         claims = [f"genfv_matches_or_beats_fl_at_low_alpha={gv_lo >= fl_lo - 0.05}",
                   f"aigc_fast_start_then_plateau={aigc_plateau}"]
         if len(alphas) > 1:
-            fl_hi = np.mean(results[f"{dataset}/a{hi}/fl_only"][-3:])
+            fl_hi = res.curve("accuracy", strategy="fl_only",
+                              alpha=hi)[-3:].mean()
             claims.append(f"fl_improves_with_alpha={fl_hi >= fl_lo - 0.02}")
         emit(f"fig10_noniid/{dataset}/claims", 0.0, " ".join(claims))
 

@@ -25,6 +25,7 @@ from repro.configs.base import GenFVConfig
 from repro.core import mobility
 from repro.core.selection import select
 from repro.core.two_scale import plan_rounds_batched
+from repro.exp import save_artifact
 
 MODEL_BITS = 11.2e6 * 32
 PHI_SWEEP = (0.3, 0.5, 0.7, 1.0)
@@ -32,6 +33,7 @@ PHI_SWEEP = (0.3, 0.5, 0.7, 1.0)
 
 def run() -> None:
     rng = np.random.default_rng(3)
+    rows = []
     for t_max in (2.5, 3.0, 4.0):
         cfg = GenFVConfig(t_max=t_max)
         hists = rng.dirichlet(np.full(10, 0.5), size=40)
@@ -58,8 +60,14 @@ def run() -> None:
             emit(f"fig7_power/tmax{t_max}/phi{phi_max}", dt,
                  f"objective={obj:.3f}s selected={len(plan.selected)} "
                  f"monotone_ok={mono}")
+            rows.append({"t_max": t_max, "phi_max": phi_max,
+                         "objective_s": obj,
+                         "selected": len(plan.selected),
+                         "monotone_ok": bool(mono),
+                         "us_per_fleet": dt})
             if np.isfinite(obj):
                 prev = obj
+    save_artifact("fig7_power", "powergrid", {"rows": rows})
 
 
 if __name__ == "__main__":

@@ -9,6 +9,7 @@ import numpy as np
 
 from benchmarks.common import emit
 from repro.configs.base import GenFVConfig
+from repro.exp import save_artifact
 from repro.core import bandwidth as bw
 from repro.core import channel, gpu_model, mobility, power as pw
 from repro.core.selection import select
@@ -55,6 +56,9 @@ def run() -> None:
     emit("fig8_subproblems/summary", dt,
          f"monotone={all(a >= b - 1e-6 for a, b in zip(objs, objs[1:]))} "
          f"total_drop={objs[0] - objs[-1]:.3f}s")
+    save_artifact("fig8_subproblems", "bcdtrace",
+                  {"stages": stages, "objectives": objs,
+                   "bcd_iters": plan.bcd_iters})
 
 
 if __name__ == "__main__":

@@ -1,6 +1,9 @@
-"""Regenerate the §Dry-run / §Roofline tables of EXPERIMENTS.md from the
-dry-run artifacts. The narrative sections are maintained by hand; this
-script rewrites only the blocks between the AUTOGEN markers.
+"""Regenerate the autogen tables of EXPERIMENTS.md: the §Sweeps /
+§Theorem-1 sections from the versioned `repro.exp` artifacts
+(artifacts/*.sweep.json, *.theorem1.json) and the §Dry-run / §Roofline
+tables from the dry-run artifacts. The narrative sections are maintained
+by hand; this script rewrites only the blocks between the AUTOGEN markers
+(and creates a marker skeleton when EXPERIMENTS.md does not exist yet).
 
   PYTHONPATH=src python benchmarks/make_experiments_md.py
 """
@@ -14,7 +17,44 @@ import re
 ROOT = os.path.join(os.path.dirname(__file__), "..")
 ART = os.path.join(ROOT, "benchmarks", "artifacts")
 ART_OPT = os.path.join(ROOT, "benchmarks", "artifacts_opt")
+SWEEP_ART = os.path.join(ROOT, "artifacts")
 MD = os.path.join(ROOT, "EXPERIMENTS.md")
+
+SKELETON = """# EXPERIMENTS
+
+Sweep results produced by the `repro.exp` experiment API (versioned
+artifacts under `artifacts/`), plus roofline/dry-run tables where those
+artifacts exist. Narrative is maintained by hand; the blocks between
+AUTOGEN markers are rewritten by `benchmarks/make_experiments_md.py`.
+
+## Sweeps
+
+<!-- AUTOGEN:sweeps -->
+<!-- /AUTOGEN:sweeps -->
+
+## Theorem 1 — bound vs realized
+
+<!-- AUTOGEN:theorem1 -->
+<!-- /AUTOGEN:theorem1 -->
+
+## Roofline (single-pod)
+
+<!-- AUTOGEN:roofline-sp -->
+<!-- /AUTOGEN:roofline-sp -->
+
+## Roofline (multi-pod)
+
+<!-- AUTOGEN:roofline-mp -->
+<!-- /AUTOGEN:roofline-mp -->
+
+## Dry-run
+
+<!-- AUTOGEN:dryrun -->
+<!-- /AUTOGEN:dryrun -->
+
+<!-- AUTOGEN:counts -->
+<!-- /AUTOGEN:counts -->
+"""
 
 
 def load(d):
@@ -87,9 +127,64 @@ def dryrun_summary(recs):
     return "\n".join(lines)
 
 
+def sweep_tables(directory: str = SWEEP_ART) -> str:
+    """One summary row per cell of every *.sweep.json artifact, decoded
+    through `SweepResult.load` (the single reader of the sweep/v1 layout)."""
+    from repro.exp import SweepResult, list_artifacts
+    paths = list_artifacts("sweep", directory)
+    if not paths:
+        return "_no sweep artifacts yet — run a `Sweep(...).save()`_"
+    blocks = []
+    for path in paths:
+        res = SweepResult.load(path)
+        meta = res.meta
+        lines = [f"**{res.spec.name}** (`{os.path.basename(path)}`, "
+                 f"{len(res.cells)} cells x {int(res.rounds.max())} rounds, "
+                 f"{meta.get('planner_dispatches', '?')} batched planner "
+                 f"dispatches, largest batch "
+                 f"{meta.get('planner_largest_batch', '?')})",
+                 "",
+                 "| strategy | scenario | alpha | seed | final acc | "
+                 "final loss | mean t_bar | dropped |",
+                 "|---|---|---|---|---|---|---|---|"]
+        final_acc = res.final("accuracy")
+        final_loss = res.final("loss")
+        for i, cell in enumerate(res.cells):
+            T = int(res.rounds[i])
+            if T == 0:
+                continue
+            lines.append(
+                f"| {cell['strategy']} | {cell['scenario']} | "
+                f"{cell['alpha']} | {cell['seed']} | "
+                f"{final_acc[i]:.3f} | {final_loss[i]:.3f} | "
+                f"{res.metrics['t_bar'][i, :T].mean():.2f}s | "
+                f"{int(res.metrics['dropped'][i, :T].sum())} |")
+        blocks.append("\n".join(lines))
+    return "\n\n".join(blocks)
+
+
+def theorem1_tables(directory: str = SWEEP_ART) -> str:
+    """Per-scenario bound-tightness tables from *.theorem1.json, formatted
+    by the same helper `Theorem1Report.to_markdown` uses."""
+    from repro.exp import list_artifacts, load_artifact
+    from repro.exp.analysis import per_scenario_markdown
+    paths = list_artifacts("theorem1", directory)
+    if not paths:
+        return "_no theorem1 artifacts yet — run `benchmarks/theorem1.py`_"
+    blocks = []
+    for path in paths:
+        doc = load_artifact(path, kind="theorem1")
+        blocks.append(f"**{os.path.basename(path)}** "
+                      f"(L* proxy {doc['loss_star']:.4f}, g_n={doc['g_n']})"
+                      f"\n\n{per_scenario_markdown(doc['per_scenario'])}")
+    return "\n\n".join(blocks)
+
+
 def inject(md: str, marker: str, content: str) -> str:
     start = f"<!-- AUTOGEN:{marker} -->"
     end = f"<!-- /AUTOGEN:{marker} -->"
+    if start not in md:
+        return md                               # marker absent: leave as-is
     pat = re.compile(re.escape(start) + ".*?" + re.escape(end), re.S)
     return pat.sub(start + "\n" + content + "\n" + end, md)
 
@@ -97,7 +192,9 @@ def inject(md: str, marker: str, content: str) -> str:
 def main():
     recs = load(ART)
     opt = load(ART_OPT)
-    md = open(MD).read()
+    md = open(MD).read() if os.path.exists(MD) else SKELETON
+    md = inject(md, "sweeps", sweep_tables())
+    md = inject(md, "theorem1", theorem1_tables())
     md = inject(md, "roofline-sp", roofline_table(recs, "16x16", opt))
     md = inject(md, "roofline-mp", roofline_table(recs, "2x16x16"))
     md = inject(md, "dryrun", dryrun_summary(recs))

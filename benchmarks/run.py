@@ -10,9 +10,10 @@ import sys
 import time
 import traceback
 
-from benchmarks import (bench_planner, bench_rounds, bench_world, fig5_emd,
-                        fig6_selection, fig7_power, fig8_subproblems,
-                        fig9_generation, fig10_noniid, roofline, theorem1)
+from benchmarks import (bench_planner, bench_rounds, bench_sweep,
+                        bench_world, fig5_emd, fig6_selection, fig7_power,
+                        fig8_subproblems, fig9_generation, fig10_noniid,
+                        roofline, theorem1)
 
 MODULES = {
     "fig5": fig5_emd.run,
@@ -26,7 +27,12 @@ MODULES = {
     "rounds": bench_rounds.run,          # quick sweep; full: -m benchmarks.bench_rounds
     "world": bench_world.run,            # sim world; full: -m benchmarks.bench_world
     "planner": bench_planner.run,        # two-scale planner; full: -m benchmarks.bench_planner
+    "sweep": bench_sweep.run,            # repro.exp grid; full: -m benchmarks.bench_sweep
 }
+
+# FL-training-heavy modules skipped under --quick (the `sweep` smoke still
+# exercises the grid/batched-planning path end-to-end there)
+HEAVY = ("fig6", "fig10", "theorem1")
 
 
 def main() -> int:
@@ -34,14 +40,14 @@ def main() -> int:
     ap.add_argument("--only", default=None,
                     help="comma-separated module keys")
     ap.add_argument("--quick", action="store_true",
-                    help="skip the FL-training figures (fig6, fig10)")
+                    help=f"skip the FL-training figures {HEAVY}")
     args = ap.parse_args()
 
     keys = list(MODULES)
     if args.only:
         keys = [k for k in args.only.split(",") if k in MODULES]
     if args.quick:
-        keys = [k for k in keys if k not in ("fig6", "fig10")]
+        keys = [k for k in keys if k not in HEAVY]
 
     print("name,us_per_call,derived")
     failures = 0

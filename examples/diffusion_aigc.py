@@ -17,8 +17,9 @@ import numpy as np
 from repro.configs.base import GenFVConfig
 from repro.data.synthetic import make_image_dataset
 from repro.diffusion import DDPM, ddpm_loss, ddpm_sample, make_ddpm
+from repro.exp import ExperimentSpec, Sweep
 from repro.fl.generator import DDPMGenerator
-from repro.fl.rounds import GenFVRunner, RunConfig
+from repro.fl.rounds import RunConfig
 
 
 def main():
@@ -54,13 +55,18 @@ def main():
           f"min={float(samples.min()):.2f} max={float(samples.max()):.2f}")
 
     print("\n[genfv] running rounds with the trained DDPM as the AIGC service")
-    runner = GenFVRunner(
-        RunConfig(rounds=args.rounds, train_size=600, test_size=64,
-                  width_mult=0.125),
-        fl_cfg=GenFVConfig(batch_size=16, local_steps=2, num_vehicles=8),
-        generator=DDPMGenerator(params, ddpm))
-    res = runner.train(verbose=True)
-    print(f"[genfv+ddpm] final accuracy {res.logs[-1].accuracy:.3f}")
+    # a one-cell repro.exp experiment; generator_factory plugs the trained
+    # DDPM in as each cell's AIGC service instead of the fast oracle
+    spec = ExperimentSpec(
+        name="diffusion_aigc",
+        base=RunConfig(rounds=args.rounds, train_size=600, test_size=64,
+                       width_mult=0.125))
+    result = Sweep(spec,
+                   fl_cfg=GenFVConfig(batch_size=16, local_steps=2,
+                                      num_vehicles=8),
+                   generator_factory=lambda cell: DDPMGenerator(params, ddpm),
+                   verbose=True).run()
+    print(f"[genfv+ddpm] final accuracy {float(result.final('accuracy')[0]):.3f}")
 
 
 if __name__ == "__main__":

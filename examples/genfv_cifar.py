@@ -16,7 +16,8 @@ import argparse
 import numpy as np
 
 from repro.configs.base import GenFVConfig
-from repro.fl import GenFVRunner, RunConfig
+from repro.exp import ExperimentSpec, Sweep
+from repro.fl import RunConfig
 
 
 def main():
@@ -30,21 +31,22 @@ def main():
                          "memoryless per-round fleet sampler")
     args = ap.parse_args()
 
+    # one declarative grid over the scheme axis; Sweep shares the dataset
+    # build across schemes and plans all their rounds in batched dispatches
+    spec = ExperimentSpec(
+        name="genfv_cifar",
+        strategies=tuple(args.schemes.split(",")),
+        alphas=(args.alpha,),
+        base=RunConfig(dataset=args.dataset, rounds=args.rounds,
+                       train_size=2000, test_size=192, width_mult=0.125,
+                       seed=3, model_bits=11.2e6 * 32,
+                       scenario=args.scenario))
     fl_cfg = GenFVConfig(batch_size=16, local_steps=4, num_vehicles=16)
-    results = {}
-    for scheme in args.schemes.split(","):
-        print(f"\n=== {scheme} (alpha={args.alpha}) ===")
-        runner = GenFVRunner(
-            RunConfig(dataset=args.dataset, alpha=args.alpha,
-                      rounds=args.rounds, strategy=scheme, train_size=2000,
-                      test_size=192, width_mult=0.125, seed=3,
-                      model_bits=11.2e6 * 32, scenario=args.scenario),
-            fl_cfg=fl_cfg)
-        res = runner.train(verbose=True)
-        results[scheme] = res.curve("accuracy")
+    result = Sweep(spec, fl_cfg=fl_cfg, verbose=True).run()
 
     print("\n=== summary (mean of last 3 rounds) ===")
-    for scheme, acc in results.items():
+    for scheme in spec.strategies:
+        acc = result.curve("accuracy", strategy=scheme)
         print(f"  {scheme:10s} acc={np.mean(acc[-3:]):.3f}  "
               f"curve={[round(a, 3) for a in acc.tolist()]}")
 

@@ -4,7 +4,7 @@
 
 1. paper math  — EMD weighting + the two-scale resource allocator
 2. model zoo   — one assigned backbone, forward + decode
-3. FL runtime  — two GenFV rounds end-to-end
+3. experiments — a 2-cell repro.exp grid, two GenFV rounds end-to-end
 """
 import sys, os
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
@@ -39,11 +39,15 @@ prompt = jax.random.randint(jax.random.PRNGKey(1), (1, 16), 0, mcfg.vocab_size)
 out = api.greedy_generate(mcfg, params, prompt, steps=8)
 print(f"[model] qwen1.5-0.5b (reduced) generated tokens: {out[0].tolist()}")
 
-# ---- 3. federated rounds ----------------------------------------------------
-from repro.fl import GenFVRunner, RunConfig
+# ---- 3. federated experiments -----------------------------------------------
+from repro.exp import ExperimentSpec, Sweep
+from repro.fl import RunConfig
 
-runner = GenFVRunner(
-    RunConfig(rounds=2, train_size=600, test_size=64, width_mult=0.125),
-    fl_cfg=GenFVConfig(batch_size=16, local_steps=2, num_vehicles=8))
-res = runner.train(verbose=True)
-print(f"[genfv] final accuracy {res.logs[-1].accuracy:.3f}")
+spec = ExperimentSpec(
+    strategies=("genfv", "fl_only"),      # a 2-cell grid
+    base=RunConfig(rounds=2, train_size=600, test_size=64, width_mult=0.125))
+result = Sweep(spec, fl_cfg=GenFVConfig(batch_size=16, local_steps=2,
+                                        num_vehicles=8), verbose=True).run()
+for s in spec.strategies:
+    print(f"[{s}] final accuracy "
+          f"{float(result.curve('accuracy', strategy=s)[-1]):.3f}")

@@ -2,12 +2,13 @@
 
   PYTHONPATH=src python examples/scenario_sweep.py [--rounds N] [--scenarios a,b]
 
-Each named scenario (repro/sim/scenarios.py) parameterizes the persistent
-vehicular world — arrival rate, speed law, coverage geometry, shadowing —
-and the same selection/allocation/augmentation stack runs on top. The
-summary table shows how traffic shapes federated learning: rush-hour jams
-keep vehicles in coverage for many rounds (stable fleets, few dropouts),
-free-flow highways churn the fleet, sparse cells starve selection.
+One `repro.exp` experiment: the scenario axis of an `ExperimentSpec`
+enumerates the registered traffic presets (repro/sim/scenarios.py), and
+`Sweep` runs every cell sharing one dataset build and FleetEngine, with
+all cells' SUBP2-4 planning batched per round. The summary table shows how
+traffic shapes federated learning: rush-hour jams keep vehicles in
+coverage for many rounds (stable fleets, few dropouts), free-flow highways
+churn the fleet, sparse cells starve selection.
 """
 import argparse
 import os
@@ -16,7 +17,8 @@ import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from repro.configs.base import GenFVConfig
-from repro.fl import GenFVRunner, RunConfig
+from repro.exp import ExperimentSpec, Sweep
+from repro.fl import RunConfig
 from repro.sim import scenario_names
 
 
@@ -25,30 +27,38 @@ def main() -> int:
     ap.add_argument("--rounds", type=int, default=5)
     ap.add_argument("--scenarios", default="",
                     help="comma-separated subset (default: all registered)")
+    ap.add_argument("--save", action="store_true",
+                    help="write the artifacts/scenario_sweep.sweep.json "
+                         "artifact")
     args = ap.parse_args()
-    names = ([s for s in args.scenarios.split(",") if s]
-             or list(scenario_names()))
+    names = tuple([s for s in args.scenarios.split(",") if s]
+                  or scenario_names())
 
-    rows = []
-    for name in names:
-        runner = GenFVRunner(
-            RunConfig(rounds=args.rounds, train_size=600, test_size=64,
-                      width_mult=0.125, scenario=name),
-            fl_cfg=GenFVConfig(batch_size=16, local_steps=2, num_vehicles=10))
-        res = runner.train()
-        rows.append((name,
-                     float(res.curve("selected").mean()),
-                     int(res.curve("dropped").sum()),
-                     float(res.curve("t_bar").mean()),
-                     float(res.curve("emd_bar").mean()),
-                     float(res.logs[-1].accuracy)))
-        print(f"[{name}] done: acc={rows[-1][-1]:.3f}")
+    spec = ExperimentSpec(
+        name="scenario_sweep",
+        scenarios=names,
+        base=RunConfig(rounds=args.rounds, train_size=600, test_size=64,
+                       width_mult=0.125))
+    result = Sweep(spec, fl_cfg=GenFVConfig(batch_size=16, local_steps=2,
+                                            num_vehicles=10)).run()
+    if args.save:
+        print(f"artifact: {result.save()}")
 
+    print(f"{len(names)} scenarios, "
+          f"{result.meta['planner_dispatches']} batched planner dispatches "
+          f"(largest batch {result.meta['planner_largest_batch']}), "
+          f"{result.meta['dataset_builds']} dataset builds for "
+          f"{spec.n_cells} cells")
     print(f"\n{'scenario':<20} {'sel/round':>9} {'dropped':>8} "
           f"{'t_bar':>7} {'emd_bar':>8} {'final acc':>10}")
-    for name, sel, drop, t_bar, emd, acc in rows:
-        print(f"{name:<20} {sel:>9.1f} {drop:>8d} {t_bar:>7.2f} "
-              f"{emd:>8.2f} {acc:>10.3f}")
+    for name in names:
+        sub = result.select(scenario=name)
+        print(f"{name:<20} "
+              f"{float(sub.curve('selected', scenario=name).mean()):>9.1f} "
+              f"{int(sub.curve('dropped', scenario=name).sum()):>8d} "
+              f"{float(sub.curve('t_bar', scenario=name).mean()):>7.2f} "
+              f"{float(sub.curve('emd_bar', scenario=name).mean()):>8.2f} "
+              f"{float(sub.final('accuracy')[0]):>10.3f}")
     return 0
 
 

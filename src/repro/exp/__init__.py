@@ -1,0 +1,31 @@
+"""repro.exp — composable experiment API for the paper's sweep-shaped
+results (Figs. 5-10, Theorem 1).
+
+spec       ExperimentSpec: a declarative grid over strategy x scenario x
+           alpha x seed x config-override variants; `expand()` freezes one
+           validated RunConfig per cell. `grid()` is the bare ordered
+           cartesian product for non-FL parameter loops.
+sweep      Sweep: executes a spec sharing dataset builds and FleetEngines
+           across cells, and routing all jax-planner cells' SUBP2-4
+           through batched `plan_rounds_batched` dispatches. Returns a
+           struct-of-arrays SweepResult (round x cell metric tensors with
+           curve/select/to_json/save and a versioned artifact schema).
+analysis   Theorem-1 as an API call: evaluate the convergence bound per
+           cell against its realized loss curve and aggregate
+           bound-tightness per scenario.
+artifacts  versioned JSON artifact store (default: artifacts/).
+"""
+from repro.exp.analysis import Theorem1Report, optimal_kappa2, \
+    per_scenario_markdown, theorem1_comparison
+from repro.exp.artifacts import artifact_dir, list_artifacts, \
+    load_artifact, save_artifact
+from repro.exp.spec import SPEC_SCHEMA, Cell, ExperimentSpec, grid
+from repro.exp.sweep import SWEEP_SCHEMA, Sweep, SweepResult
+
+__all__ = [
+    "Cell", "ExperimentSpec", "grid", "SPEC_SCHEMA",
+    "Sweep", "SweepResult", "SWEEP_SCHEMA",
+    "Theorem1Report", "theorem1_comparison", "optimal_kappa2",
+    "per_scenario_markdown",
+    "artifact_dir", "save_artifact", "load_artifact", "list_artifacts",
+]

@@ -1,0 +1,181 @@
+"""Declarative experiment grids.
+
+An `ExperimentSpec` names the four sweep axes the paper's results actually
+vary — strategy, scenario, Dirichlet alpha, seed — plus an override-variant
+axis for anything else on `RunConfig` (planner backend, model size, ...).
+`expand()` returns one frozen, registry-validated `RunConfig` per grid cell
+in a deterministic order; validation runs eagerly at spec construction, so
+a typo'd strategy name fails before any dataset is built or kernel traced.
+
+`to_json()` is byte-deterministic across processes (sorted keys, plain
+scalars only) — the guard tests/test_exp.py pins it the same way the
+rush_hour cross-runner test pins the world.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Sequence, Tuple
+
+from repro.fl.rounds import RunConfig
+
+SPEC_SCHEMA = "repro.exp/spec/v1"
+
+#: RunConfig fields owned by the grid axes — overriding them per-variant
+#: would make a cell's coordinates ambiguous.
+_AXIS_FIELDS = frozenset({"strategy", "scenario", "alpha", "seed"})
+_RUN_FIELDS = frozenset(f.name for f in dataclasses.fields(RunConfig))
+
+
+def grid(**axes: Sequence) -> List[Dict[str, Any]]:
+    """Ordered cartesian product of named axes.
+
+    ``grid(dataset=("cifar10", "gtsrb"), alpha=(0.1, 1.0))`` yields the four
+    dicts in nested order (later axes fastest). Deterministic: iteration
+    follows keyword order, never hash order. The light-weight counterpart of
+    `ExperimentSpec.expand()` for parameter loops that do not run FL rounds
+    (benchmarks fig5/fig9).
+    """
+    cells: List[Dict[str, Any]] = [{}]
+    for key, values in axes.items():
+        cells = [dict(c, **{key: v}) for c in cells for v in values]
+    return cells
+
+
+def _freeze_overrides(overrides) -> Tuple[Tuple[Tuple[str, Any], ...], ...]:
+    """Normalize a sequence of override dicts into hashable sorted tuples."""
+    frozen = []
+    for ov in (overrides if overrides else ({},)):
+        items = sorted(dict(ov).items())
+        for key, _ in items:
+            if key in _AXIS_FIELDS:
+                raise ValueError(
+                    f"override {key!r} collides with a grid axis; sweep it "
+                    f"via the {key}s axis instead")
+            if key not in _RUN_FIELDS:
+                raise ValueError(
+                    f"unknown RunConfig field {key!r} in overrides; valid: "
+                    f"{', '.join(sorted(_RUN_FIELDS))}")
+        frozen.append(tuple(items))
+    return tuple(frozen)
+
+
+@dataclass(frozen=True)
+class Cell:
+    """One grid point: its coordinates plus the frozen RunConfig."""
+    index: int
+    strategy: str
+    scenario: str
+    alpha: float
+    seed: int
+    variant: int                       # index into spec.overrides
+    run: RunConfig
+
+    def coords(self) -> Dict[str, Any]:
+        return {"index": self.index, "strategy": self.strategy,
+                "scenario": self.scenario, "alpha": self.alpha,
+                "seed": self.seed, "variant": self.variant}
+
+
+@dataclass(frozen=True)
+class ExperimentSpec:
+    name: str = "experiment"
+    #: axes left as None inherit a single value from `base` — so a spec
+    #: never silently discards e.g. base.seed just because the seed axis
+    #: was not swept
+    strategies: Tuple[str, ...] | None = None
+    scenarios: Tuple[str, ...] | None = None
+    alphas: Tuple[float, ...] | None = None
+    seeds: Tuple[int, ...] | None = None
+    #: non-axis RunConfig fields shared by every cell (rounds, sizes, ...)
+    base: RunConfig = field(default_factory=RunConfig)
+    #: per-variant RunConfig overrides; accepts dicts, stored as sorted
+    #: (key, value) tuples so the spec stays hashable. One empty variant
+    #: by default (the base config itself).
+    overrides: Tuple = ((),)
+
+    def __post_init__(self):
+        b = self.base
+        axes = {"strategies": (b.strategy,), "scenarios": (b.scenario,),
+                "alphas": (b.alpha,), "seeds": (b.seed,)}
+        for axis, fallback in axes.items():
+            if getattr(self, axis) is None:
+                object.__setattr__(self, axis, fallback)
+        object.__setattr__(self, "strategies", tuple(self.strategies))
+        object.__setattr__(self, "scenarios", tuple(self.scenarios))
+        object.__setattr__(self, "alphas",
+                           tuple(float(a) for a in self.alphas))
+        object.__setattr__(self, "seeds", tuple(int(s) for s in self.seeds))
+        object.__setattr__(self, "overrides",
+                           _freeze_overrides(self.overrides))
+        for axis in ("strategies", "scenarios", "alphas", "seeds"):
+            if not getattr(self, axis):
+                raise ValueError(f"axis {axis} is empty")
+        # eager validation: constructing every cell runs RunConfig's
+        # registry checks, so bad strategy/scenario/planner names fail
+        # here — not ten minutes into a sweep
+        self.expand()
+
+    # ------------------------------------------------------------------
+    @property
+    def n_cells(self) -> int:
+        return (len(self.strategies) * len(self.scenarios)
+                * len(self.alphas) * len(self.seeds) * len(self.overrides))
+
+    def expand(self) -> List[Cell]:
+        """Deterministic nested expansion: strategy (slowest) > scenario >
+        alpha > seed > override variant (fastest)."""
+        cells: List[Cell] = []
+        i = 0
+        for strat in self.strategies:
+            for scen in self.scenarios:
+                for alpha in self.alphas:
+                    for seed in self.seeds:
+                        for v, ov in enumerate(self.overrides):
+                            run = dataclasses.replace(
+                                self.base, strategy=strat, scenario=scen,
+                                alpha=alpha, seed=seed, **dict(ov))
+                            cells.append(Cell(i, strat, scen, alpha, seed,
+                                              v, run))
+                            i += 1
+        return cells
+
+    # ------------------------------------------------------------------
+    def to_payload(self) -> Dict[str, Any]:
+        return {
+            "schema": SPEC_SCHEMA,
+            "name": self.name,
+            "axes": {
+                "strategies": list(self.strategies),
+                "scenarios": list(self.scenarios),
+                "alphas": list(self.alphas),
+                "seeds": list(self.seeds),
+            },
+            "base": dataclasses.asdict(self.base),
+            "overrides": [dict(ov) for ov in self.overrides],
+        }
+
+    def to_json(self) -> str:
+        """Canonical serialization: byte-identical for equal specs across
+        fresh processes (sorted keys, fixed separators, scalar leaves)."""
+        return json.dumps(self.to_payload(), sort_keys=True,
+                          separators=(",", ":"), allow_nan=False)
+
+    @classmethod
+    def from_payload(cls, payload: Dict[str, Any]) -> "ExperimentSpec":
+        if payload.get("schema") != SPEC_SCHEMA:
+            raise ValueError(f"not an {SPEC_SCHEMA} payload: "
+                             f"{payload.get('schema')!r}")
+        axes = payload["axes"]
+        return cls(name=payload["name"],
+                   strategies=tuple(axes["strategies"]),
+                   scenarios=tuple(axes["scenarios"]),
+                   alphas=tuple(axes["alphas"]),
+                   seeds=tuple(axes["seeds"]),
+                   base=RunConfig(**payload["base"]),
+                   overrides=tuple(payload["overrides"]))
+
+    @classmethod
+    def from_json(cls, text: str) -> "ExperimentSpec":
+        return cls.from_payload(json.loads(text))

@@ -1,2 +1,4 @@
 from repro.fl.fleet import FleetEngine
-from repro.fl.rounds import GenFVRunner, RunConfig
+from repro.fl.rounds import (PLANNERS, STRATEGIES, GenFVRunner, PendingRound,
+                             RoundLog, RunConfig, RunResult,
+                             eval_stream_seed, validate_run_fields)

@@ -13,7 +13,7 @@ Each round:
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List
+from typing import Callable, List
 
 import jax
 import jax.numpy as jnp
@@ -23,6 +23,7 @@ from repro.configs.base import GenFVConfig
 from repro.configs.genfv_cifar import CNNConfig, cnn_config
 from repro.core import mobility, plan_round
 from repro.core.generation import label_schedule
+from repro.core.planner import RoundPlan
 from repro.core.selection import (dropout_mask, select, select_madca,
                                   select_no_emd, select_ocean, select_random)
 from repro.data.partition import dirichlet_partition
@@ -32,18 +33,56 @@ from repro.fl.fleet import FleetEngine
 from repro.fl.generator import OracleGenerator
 from repro.fl.server import GenFVServer
 from repro.models.cnn import cnn_forward, init_cnn
-from repro.sim import LEGACY, VehicularWorld, get_scenario
+from repro.sim import LEGACY, VehicularWorld, get_scenario, scenario_names
 
 STRATEGIES = ("genfv", "fedavg", "no_emd", "madca", "ocean",
               "fl_only", "aigc_only", "fedprox")
+
+#: SUBP2-4 backends understood by core/two_scale.py::plan_round.
+PLANNERS = ("jax", "numpy")
 
 # moderate client lr: high-lr few-class local models drift into incompatible
 # basins and weight-average destructively
 CLIENT_LR = 5e-2
 
 
-@dataclass
+def validate_run_fields(strategy: str, scenario: str, planner: str,
+                        dataset: str) -> None:
+    """Registry validation shared by `RunConfig` and `repro.exp`'s
+    `ExperimentSpec`: unknown names used to fail deep inside the round loop
+    (or silently fall through string compares in `_alpha`); now they raise
+    at construction with the valid names spelled out."""
+    if strategy not in STRATEGIES:
+        raise ValueError(f"unknown strategy {strategy!r}; valid: "
+                         f"{', '.join(STRATEGIES)}")
+    if scenario != LEGACY and scenario not in scenario_names():
+        raise ValueError(
+            f"unknown scenario {scenario!r}; registered: "
+            f"{', '.join(scenario_names())} (or {LEGACY!r} for the "
+            f"memoryless seed sampler)")
+    if planner not in PLANNERS:
+        raise ValueError(f"unknown planner {planner!r}; valid: "
+                         f"{', '.join(PLANNERS)}")
+    if dataset not in DATASET_CLASSES:
+        raise ValueError(f"unknown dataset {dataset!r}; valid: "
+                         f"{', '.join(DATASET_CLASSES)}")
+
+
+def eval_stream_seed(seed: int) -> int:
+    """RNG seed of the held-out eval set for run seed `seed`.
+
+    The seed's `seed + 999` scheme collided under seed sweeps: cell 0's
+    eval set drew from the same stream as cell 999's train set. Spawning a
+    child `SeedSequence` instead gives every run seed an eval stream that
+    no integer root seed (and no other run's spawn) can reproduce."""
+    child = np.random.SeedSequence(seed).spawn(1)[0]
+    return int(child.generate_state(1, np.uint64)[0])
+
+
+@dataclass(frozen=True)
 class RunConfig:
+    """One experiment cell: frozen so `repro.exp` grids can expand, hash and
+    serialize cells; validated at construction (`validate_run_fields`)."""
     dataset: str = "cifar10"
     alpha: float = 0.1
     rounds: int = 20
@@ -61,6 +100,10 @@ class RunConfig:
     # SUBP2-4 backend: "jax" (jitted/batched XLA kernel, default) or
     # "numpy" (host reference solver; pins the paper math bit-for-bit)
     planner: str = "jax"
+
+    def __post_init__(self):
+        validate_run_fields(self.strategy, self.scenario, self.planner,
+                            self.dataset)
 
 
 @dataclass
@@ -84,9 +127,20 @@ class RunResult:
         return np.array([getattr(l, key) for l in self.logs])
 
 
+@dataclass
+class PendingRound:
+    """A round between `begin_round` (fleet + SUBP1 done) and
+    `finish_round` (waiting on its SUBP2-4 `RoundPlan`)."""
+    t: int
+    fleet: List
+    parts: np.ndarray
+    alpha: np.ndarray
+
+
 class GenFVRunner:
     def __init__(self, run: RunConfig, fl_cfg: GenFVConfig | None = None,
-                 generator=None):
+                 generator=None, engine: FleetEngine | None = None,
+                 dataset_fn: Callable | None = None):
         self.run = run
         self.cfg = fl_cfg or GenFVConfig(dirichlet_alpha=run.alpha)
         self.scenario = None if run.scenario == LEGACY \
@@ -99,10 +153,13 @@ class GenFVRunner:
         self.cnn_cfg: CNNConfig = cnn_config(run.dataset, run.width_mult)
         classes = DATASET_CLASSES[run.dataset]
 
-        imgs, labels = make_image_dataset(run.dataset, run.train_size,
-                                          seed=run.seed)
-        self.test_imgs, self.test_labels = make_image_dataset(
-            run.dataset, run.test_size, seed=run.seed + 999)
+        # dataset_fn lets repro.exp's Sweep share one dataset build across
+        # grid cells (identical (name, n, seed) calls -> identical arrays,
+        # so the cache is exact, not approximate)
+        dataset_fn = dataset_fn or make_image_dataset
+        imgs, labels = dataset_fn(run.dataset, run.train_size, seed=run.seed)
+        self.test_imgs, self.test_labels = dataset_fn(
+            run.dataset, run.test_size, seed=eval_stream_seed(run.seed))
         parts = dirichlet_partition(labels, self.cfg.num_vehicles, run.alpha,
                                     self.rng)
         self.client_data = [(imgs[ix], labels[ix]) for ix in parts]
@@ -124,10 +181,24 @@ class GenFVRunner:
         self.server = GenFVServer(self.cnn_cfg, params, gen, self.rng)
         # max_bucket at the hard ceiling: fleet size is Poisson(num_vehicles),
         # so K can exceed the engine's conservative default cap; buckets
-        # compile lazily, an unused headroom costs nothing
-        self.engine = FleetEngine(self.cnn_cfg, self.cfg.local_steps,
-                                  self.cfg.batch_size, lr=CLIENT_LR,
-                                  max_bucket=4096)
+        # compile lazily, an unused headroom costs nothing. An injected
+        # engine (Sweep shares one per model shape) must match this runner's
+        # dispatch signature exactly.
+        if engine is not None:
+            if (engine.cfg != self.cnn_cfg or engine.h != self.cfg.local_steps
+                    or engine.batch_size != self.cfg.batch_size
+                    or engine.lr != CLIENT_LR):
+                raise ValueError(
+                    "injected FleetEngine does not match this run's model "
+                    f"shape: engine=({engine.cfg.name}, h={engine.h}, "
+                    f"B={engine.batch_size}, lr={engine.lr}) vs run="
+                    f"({self.cnn_cfg.name}, h={self.cfg.local_steps}, "
+                    f"B={self.cfg.batch_size}, lr={CLIENT_LR})")
+            self.engine = engine
+        else:
+            self.engine = FleetEngine(self.cnn_cfg, self.cfg.local_steps,
+                                      self.cfg.batch_size, lr=CLIENT_LR,
+                                      max_bucket=4096)
         self.classes = classes
         self.b_prev = 0
         cfg_cnn = self.cnn_cfg
@@ -158,8 +229,15 @@ class GenFVRunner:
         raise ValueError(s)
 
     # ------------------------------------------------------------------
-    def run_round(self, t: int) -> RoundLog:
-        run = self.run
+    # Round lifecycle. `run_round` = begin -> plan -> finish; repro.exp's
+    # Sweep drives the same three phases but routes many cells' `plan`
+    # calls through ONE `plan_rounds_batched` dispatch between begin and
+    # finish. The split is RNG-neutral: `begin_round` consumes self.rng in
+    # exactly the order the old monolithic body did, and planning draws no
+    # randomness at all.
+    # ------------------------------------------------------------------
+    def begin_round(self, t: int) -> PendingRound:
+        """Phase 1: materialize the round's fleet and run SUBP1 selection."""
         cfg = self.cfg
         # fleet of the round: vehicles map onto data partitions
         if self.world is None:
@@ -174,9 +252,22 @@ class GenFVRunner:
             fleet, parts = self.world.fleet(self.hists, self.sizes)
 
         alpha = self._alpha(fleet, t) if fleet else np.zeros(0, np.int32)
-        plan = plan_round(cfg, fleet, self.model_bits, cfg.local_steps,
-                          b_prev=self.b_prev, alpha_override=alpha,
-                          planner=run.planner)
+        return PendingRound(t, fleet, parts, alpha)
+
+    def plan(self, pending: PendingRound) -> RoundPlan:
+        """Phase 2: SUBP2-4 resource allocation for one pending round."""
+        return plan_round(self.cfg, pending.fleet, self.model_bits,
+                          self.cfg.local_steps, b_prev=self.b_prev,
+                          alpha_override=pending.alpha,
+                          planner=self.run.planner)
+
+    def finish_round(self, pending: PendingRound, plan: RoundPlan) -> RoundLog:
+        """Phase 3: execute the planned round (training, generation,
+        aggregation, world step, eval)."""
+        run = self.run
+        cfg = self.cfg
+        t = pending.t
+        fleet, parts = pending.fleet, pending.parts
         self.b_prev = plan.b_gen
 
         # Mid-round dropout (persistent world only): SUBP1 admitted against
@@ -268,6 +359,10 @@ class GenFVRunner:
                                self.test_labels))
         return RoundLog(t, n_trained, plan.t_bar, plan.b_gen, k2,
                         emd_bar, float(loss), acc, dropped)
+
+    def run_round(self, t: int) -> RoundLog:
+        pending = self.begin_round(t)
+        return self.finish_round(pending, self.plan(pending))
 
     # ------------------------------------------------------------------
     def train(self, verbose: bool = False) -> RunResult:

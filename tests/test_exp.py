@@ -1,0 +1,341 @@
+"""repro.exp: spec validation/expansion, cross-process spec determinism,
+sweep/single-run bitwise parity on both planner backends, the eval-seed
+derivation fix, SweepResult artifacts, Theorem-1 analysis, and the bench
+smoke wiring."""
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.configs.base import GenFVConfig
+from repro.exp import ExperimentSpec, Sweep, SweepResult, grid, \
+    theorem1_comparison
+from repro.fl.rounds import GenFVRunner, RunConfig, eval_stream_seed
+
+REPO_ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+FAST = dict(rounds=2, train_size=300, test_size=32, width_mult=0.0625)
+FAST_CFG = GenFVConfig(batch_size=8, local_steps=2, num_vehicles=6)
+
+
+# ---------------------------------------------------------------------------
+# RunConfig / spec validation (construction-time, with the registry names)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("kw,fragment", [
+    (dict(strategy="sgd"), "unknown strategy"),
+    (dict(scenario="autobahn"), "unknown scenario"),
+    (dict(planner="torch"), "unknown planner"),
+    (dict(dataset="imagenet"), "unknown dataset"),
+])
+def test_runconfig_rejects_unknown_names(kw, fragment):
+    with pytest.raises(ValueError, match=fragment):
+        RunConfig(**kw)
+
+
+def test_runconfig_error_lists_valid_names():
+    with pytest.raises(ValueError, match="genfv.*fedavg"):
+        RunConfig(strategy="sgd")
+    with pytest.raises(ValueError, match="rush_hour.*legacy"):
+        RunConfig(scenario="autobahn")
+    RunConfig(scenario="legacy")          # the sentinel stays valid
+
+
+def test_runconfig_frozen():
+    run = RunConfig()
+    with pytest.raises(Exception):
+        run.strategy = "fedavg"
+
+
+def test_spec_validates_eagerly():
+    with pytest.raises(ValueError, match="unknown strategy"):
+        ExperimentSpec(strategies=("sgd",))
+    with pytest.raises(ValueError, match="unknown scenario"):
+        ExperimentSpec(scenarios=("autobahn",))
+    with pytest.raises(ValueError, match="unknown planner"):
+        ExperimentSpec(overrides=({"planner": "torch"},))
+    with pytest.raises(ValueError, match="unknown RunConfig field"):
+        ExperimentSpec(overrides=({"lr": 1.0},))
+    with pytest.raises(ValueError, match="collides with a grid axis"):
+        ExperimentSpec(overrides=({"strategy": "genfv"},))
+    with pytest.raises(ValueError, match="axis .* is empty"):
+        ExperimentSpec(seeds=())
+
+
+def test_spec_expand_order_and_cells():
+    spec = ExperimentSpec(
+        strategies=("genfv", "fedavg"),
+        scenarios=("rush_hour", "legacy"),
+        seeds=(0, 1),
+        base=RunConfig(**FAST),
+        overrides=({}, {"planner": "numpy"}),
+    )
+    cells = spec.expand()
+    assert len(cells) == spec.n_cells == 16
+    assert [c.index for c in cells] == list(range(16))
+    # nested order: strategy slowest, override variant fastest
+    assert [c.strategy for c in cells[:8]] == ["genfv"] * 8
+    assert cells[0].variant == 0 and cells[1].variant == 1
+    assert cells[1].run.planner == "numpy"
+    assert cells[0].run.planner == "jax"
+    # every cell RunConfig carries its coordinates
+    for c in cells:
+        assert (c.run.strategy, c.run.scenario, c.run.seed) == \
+            (c.strategy, c.scenario, c.seed)
+        assert c.run.rounds == FAST["rounds"]
+
+
+def test_spec_axes_inherit_from_base():
+    """An unswept axis takes its single value from the base config — a
+    base seed/scenario must never be silently replaced by an axis
+    default."""
+    base = RunConfig(strategy="fedprox", scenario="platoon", alpha=0.5,
+                     seed=7, **{k: v for k, v in FAST.items()})
+    spec = ExperimentSpec(base=base)
+    (cell,) = spec.expand()
+    assert (cell.strategy, cell.scenario, cell.alpha, cell.seed) == \
+        ("fedprox", "platoon", 0.5, 7)
+    # sweeping one axis keeps the others on the base values
+    spec2 = ExperimentSpec(strategies=("genfv", "fedavg"), base=base)
+    assert all(c.seed == 7 and c.scenario == "platoon"
+               for c in spec2.expand())
+
+
+def test_spec_json_roundtrip():
+    spec = ExperimentSpec(name="rt", strategies=("genfv", "fl_only"),
+                          alphas=(0.1, 1.0), base=RunConfig(**FAST),
+                          overrides=({"model_bits": 1e6},))
+    again = ExperimentSpec.from_json(spec.to_json())
+    assert again == spec
+    assert again.to_json() == spec.to_json()
+
+
+def test_spec_to_json_byte_identical_across_processes():
+    """Determinism guard (mirrors the rush_hour cross-runner test at the
+    process level): two FRESH interpreters serializing the same spec must
+    emit identical bytes — no hash-order or repr instability."""
+    prog = (
+        "from repro.fl.rounds import RunConfig\n"
+        "from repro.exp import ExperimentSpec\n"
+        "s = ExperimentSpec(name='determinism',"
+        " strategies=('genfv','fedavg','fl_only'),"
+        " scenarios=('rush_hour','sparse_rural'), alphas=(0.1, 0.3),"
+        " seeds=(0, 1, 2), base=RunConfig(rounds=3, train_size=128),"
+        " overrides=({}, {'planner': 'numpy', 'model_bits': 32.0}))\n"
+        "import sys; sys.stdout.write(s.to_json())\n"
+    )
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO_ROOT, "src") + os.pathsep + \
+        env.get("PYTHONPATH", "")
+    outs = []
+    for _ in range(2):
+        r = subprocess.run([sys.executable, "-c", prog], env=env,
+                           capture_output=True, text=True, timeout=300)
+        assert r.returncode == 0, r.stderr[-2000:]
+        outs.append(r.stdout)
+    assert outs[0] == outs[1]
+    json.loads(outs[0])                   # and it is valid JSON
+
+
+def test_grid_cartesian_order():
+    cells = grid(a=(1, 2), b=("x", "y", "z"))
+    assert cells[:3] == [{"a": 1, "b": "x"}, {"a": 1, "b": "y"},
+                         {"a": 1, "b": "z"}]
+    assert len(cells) == 6
+    assert grid() == [{}]
+
+
+# ---------------------------------------------------------------------------
+# Eval-seed derivation (the seed+999 collision fix)
+# ---------------------------------------------------------------------------
+def test_eval_seed_no_collision_with_run_seeds():
+    """seed+999 gave cell 0's eval set the stream of cell 999's train set;
+    the SeedSequence spawn cannot collide with any root integer seed."""
+    evals = {eval_stream_seed(s) for s in (0, 1, 999, 1000)}
+    assert len(evals) == 4
+    assert not evals & {0, 1, 999, 1000}
+    # regression shape of the old bug: eval stream of seed s must differ
+    # from the train stream of every swept seed
+    assert eval_stream_seed(0) != 999
+
+
+def test_eval_seed_golden():
+    """Pins the default-seed eval stream so single-run results don't shift
+    again: the derived seed and the (process-stable) label draw of the
+    seed=0 eval set. Image pixels are process-dependent (procedural
+    patterns hash class names), so only RNG-derived values are pinned."""
+    from repro.data.synthetic import make_image_dataset
+    assert eval_stream_seed(0) == 8668861027912758289
+    _, labels = make_image_dataset("cifar10", 512,
+                                   seed=eval_stream_seed(0))
+    assert labels[:16].tolist() == [5, 8, 8, 4, 8, 5, 2, 5, 9, 4, 3, 5, 7,
+                                    3, 0, 7]
+
+
+# ---------------------------------------------------------------------------
+# Sweep / single-run parity (the executor's core guarantee)
+# ---------------------------------------------------------------------------
+PARITY_KEYS = ("loss", "accuracy", "t_bar", "selected", "dropped", "b_gen",
+               "kappa2", "emd_bar")
+
+
+@pytest.mark.parametrize("planner", ["jax", "numpy"])
+def test_sweep_matches_single_runs_bitwise(planner):
+    """A 2x2 strategy x scenario grid through Sweep.run() must reproduce
+    the same cells run one-by-one through GenFVRunner — bitwise, on both
+    planner backends (jax batches SUBP2-4 across cells; numpy plans per
+    cell on the host)."""
+    spec = ExperimentSpec(
+        name=f"parity_{planner}",
+        strategies=("genfv", "fedavg"),
+        scenarios=("rush_hour", "highway_free_flow"),
+        base=RunConfig(planner=planner, **FAST),
+    )
+    result = Sweep(spec, fl_cfg=FAST_CFG).run()
+    if planner == "jax":
+        # 2 scenarios -> 2 planning groups of 2 fleets, per round
+        assert result.meta["planner_dispatches"] == 2 * FAST["rounds"]
+        assert result.meta["planner_largest_batch"] == 2
+    assert result.meta["dataset_builds"] == 2      # train + eval, shared
+    assert result.meta["engines"] == 1
+    for cell in spec.expand():
+        single = GenFVRunner(cell.run, fl_cfg=FAST_CFG).train()
+        for key in PARITY_KEYS:
+            np.testing.assert_array_equal(
+                result.metrics[key][cell.index], single.curve(key),
+                err_msg=f"{cell.strategy}/{cell.scenario}/{key}")
+
+
+def test_sweep_rerun_identical():
+    """Two fresh Sweeps over the same spec produce byte-identical result
+    JSON (in-process; cross-process metric bytes are blocked by the
+    procedural dataset's hash()-seeded patterns, which is why the
+    cross-process guard above pins the spec serialization instead)."""
+    spec = ExperimentSpec(name="rerun", strategies=("fl_only",),
+                          scenarios=("urban_stop_go",),
+                          base=RunConfig(**FAST))
+    a = Sweep(spec, fl_cfg=FAST_CFG).run()
+    b = Sweep(spec, fl_cfg=FAST_CFG).run()
+    assert a.to_json() == b.to_json()
+
+
+# ---------------------------------------------------------------------------
+# SweepResult accessors + artifact schema
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def small_result():
+    spec = ExperimentSpec(
+        name="small",
+        strategies=("genfv", "fl_only"),
+        base=RunConfig(**FAST),
+    )
+    return Sweep(spec, fl_cfg=FAST_CFG).run()
+
+
+def test_sweep_result_accessors(small_result):
+    res = small_result
+    acc = res.curve("accuracy", strategy="genfv")
+    assert acc.shape == (FAST["rounds"],)
+    assert np.all((0.0 <= acc) & (acc <= 1.0))
+    with pytest.raises(KeyError, match="matches 2 cells"):
+        res.curve("accuracy")
+    sub = res.select(strategy="fl_only")
+    assert len(sub.cells) == 1
+    np.testing.assert_array_equal(sub.metrics["loss"][0],
+                                  res.curve("loss", strategy="fl_only"))
+    with pytest.raises(KeyError, match="no cells match"):
+        res.select(strategy="madca")
+    assert res.final("accuracy").shape == (2,)
+
+
+def test_sweep_artifact_roundtrip(small_result, tmp_path):
+    path = small_result.save(directory=str(tmp_path))
+    assert path.endswith("small.sweep.json")
+    doc = json.load(open(path))
+    assert doc["schema"] == "repro.exp/sweep/v1"
+    assert doc["spec"]["schema"] == "repro.exp/spec/v1"
+    loaded = SweepResult.load(path)
+    assert loaded.to_json() == small_result.to_json()
+    np.testing.assert_array_equal(loaded.rounds, small_result.rounds)
+
+
+def test_sweep_select_subset_roundtrips(tmp_path):
+    """Regression: a select() subset of a mixed-rounds sweep must save and
+    load (max_rounds is the metric column width by contract, and subsets
+    trim their columns to the realized width)."""
+    spec = ExperimentSpec(
+        name="mixed",
+        strategies=("fl_only",),
+        base=RunConfig(**FAST),
+        overrides=({}, {"rounds": 1}),
+    )
+    res = Sweep(spec, fl_cfg=FAST_CFG).run()
+    sub = res.select(variant=1)
+    assert sub.metrics["loss"].shape == (1, 1)
+    loaded = SweepResult.from_payload(json.loads(sub.to_json()))
+    assert loaded.to_json() == sub.to_json()
+    np.testing.assert_array_equal(loaded.metrics["loss"],
+                                  sub.metrics["loss"])
+    # the full result keeps its NaN padding and still round-trips
+    full = SweepResult.from_payload(json.loads(res.to_json()))
+    assert np.isnan(full.metrics["loss"][1, 1])
+
+
+def test_sweep_artifact_rejects_wrong_kind(tmp_path):
+    p = tmp_path / "bogus.sweep.json"
+    p.write_text(json.dumps({"schema": "repro.exp/theorem1/v1"}))
+    with pytest.raises(ValueError, match="expected kind"):
+        SweepResult.load(str(p))
+
+
+# ---------------------------------------------------------------------------
+# Theorem-1 analysis
+# ---------------------------------------------------------------------------
+def test_theorem1_comparison(small_result):
+    report = theorem1_comparison(small_result)
+    assert len(report.rows) == 2
+    for row in report.rows:
+        assert np.isfinite(row.bound_final) and row.bound_final > 0
+        assert row.realized_final > 0
+        assert row.tightness > 0
+        assert 0.0 <= row.valid_fraction <= 1.0
+        assert len(row.bound_curve) == row.rounds == FAST["rounds"]
+        assert row.h == FAST_CFG.local_steps
+        # the bound contracts (or at worst plateaus) round over round
+        assert row.bound_curve[-1] <= row.bound_curve[0] + 1e-9
+    scen = report.per_scenario()
+    assert [r["scenario"] for r in scen] == ["highway_free_flow"]
+    assert scen[0]["cells"] == 2
+    md = report.to_markdown()
+    assert "highway_free_flow" in md and "tightness" in md
+
+
+def test_theorem1_artifact(small_result, tmp_path):
+    report = theorem1_comparison(small_result)
+    path = report.save("t1", directory=str(tmp_path))
+    doc = json.load(open(path))
+    assert doc["schema"] == "repro.exp/theorem1/v1"
+    assert len(doc["rows"]) == 2 and doc["per_scenario"]
+
+
+# ---------------------------------------------------------------------------
+# Bench smoke (tier-1 wiring, mirroring bench_world --quick)
+# ---------------------------------------------------------------------------
+def test_bench_sweep_quick_smoke(tmp_path):
+    out = tmp_path / "BENCH_sweep.json"
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO_ROOT, "src") + os.pathsep + \
+        env.get("PYTHONPATH", "")
+    r = subprocess.run(
+        [sys.executable, "-m", "benchmarks.bench_sweep", "--quick",
+         "--out", str(out)],
+        cwd=REPO_ROOT, env=env, capture_output=True, text=True, timeout=540)
+    assert r.returncode == 0, r.stderr[-2000:]
+    data = json.loads(out.read_text())
+    assert data["quick"] is True
+    assert data["bitwise_parity"] is True
+    assert data["n_cells"] == 2
+    assert data["meta"]["planner_dispatches"] == 2   # 1 group x 2 rounds
+    assert data["meta"]["planner_largest_batch"] == 2
