@@ -1,0 +1,134 @@
+"""Fault-tolerance benchmark: accuracy/delay degradation under the seeded
+fault schedules of fl/faults.py.
+
+For each (scenario, fault schedule) pair the same cell runs fault-free and
+faulted (twice — the second faulted run checks the round-keyed injection is
+deterministic), reporting the accuracy degradation, the realized-delay
+inflation (mean t_round / mean t_bar) and the fault ledger totals
+(dropped/late/rejected/stale_merged). Headline pairs stress the two recovery
+paths: `platoon` + platoon_mass_dropout (a convoy exits together, SUBP1's
+admitted set collapses mid-round) and `rush_hour` + rush_hour_deep_fade
+(uploads suddenly cost 20 dB more at the planned (l, phi), the
+deadline/staleness machinery carries the round).
+
+  PYTHONPATH=src python -m benchmarks.bench_faults [--quick] [--out PATH]
+
+Writes BENCH_faults.json (default: repo root) and prints the house
+``name,us_per_call,derived`` CSV lines. --quick shrinks to the two headline
+pairs at 3 rounds on a tiny train set (tier-1: tests/test_faults.py).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.configs.base import GenFVConfig
+from repro.fl.rounds import GenFVRunner, RunConfig
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DEFAULT_OUT = os.path.join(REPO_ROOT, "BENCH_faults.json")
+
+HEADLINE = [("platoon", "platoon_mass_dropout"),
+            ("rush_hour", "rush_hour_deep_fade")]
+EXTRA = [("highway_free_flow", "compute_stragglers"),
+         ("highway_free_flow", "poison_minority"),
+         ("urban_stop_go", "mixed_stress")]
+
+#: curves that must replay identically between two fresh faulted runners
+DET_KEYS = ("selected", "dropped", "late", "rejected", "stale_merged",
+            "t_round", "loss", "accuracy")
+
+
+def make_runs(quick: bool):
+    sizes = (dict(rounds=3, train_size=300, test_size=32, width_mult=0.0625)
+             if quick else
+             dict(rounds=8, train_size=600, test_size=64, width_mult=0.0625))
+    pairs = HEADLINE if quick else HEADLINE + EXTRA
+    return sizes, pairs
+
+
+def fl_cfg(quick: bool) -> GenFVConfig:
+    return GenFVConfig(batch_size=8, local_steps=2,
+                       num_vehicles=6 if quick else 10)
+
+
+def run(quick: bool = True, out: str | None = None) -> dict:
+    sizes, pairs = make_runs(quick)
+    cfg = fl_cfg(quick)
+
+    rows = []
+    deterministic = True
+    t0 = time.perf_counter()
+    for scenario, fault in pairs:
+        base_run = RunConfig(strategy="genfv", scenario=scenario, seed=0,
+                             **sizes)
+        fault_run = RunConfig(strategy="genfv", scenario=scenario, seed=0,
+                              faults=fault, **sizes)
+        base = GenFVRunner(base_run, fl_cfg=cfg).train()
+        faulted = GenFVRunner(fault_run, fl_cfg=cfg).train()
+        replay = GenFVRunner(fault_run, fl_cfg=cfg).train()
+        same = all(np.array_equal(faulted.curve(k), replay.curve(k))
+                   for k in DET_KEYS)
+        deterministic &= same
+
+        t_bar = faulted.curve("t_bar")
+        t_round = faulted.curve("t_round")
+        realized = t_bar > 0                # rounds that actually planned
+        inflation = (float(t_round[realized].mean() / t_bar[realized].mean())
+                     if realized.any() else 1.0)
+        row = {
+            "scenario": scenario,
+            "faults": fault,
+            "acc_baseline": float(base.curve("accuracy")[-1]),
+            "acc_faulted": float(faulted.curve("accuracy")[-1]),
+            "acc_degradation": float(base.curve("accuracy")[-1]
+                                     - faulted.curve("accuracy")[-1]),
+            "delay_inflation": inflation,
+            "dropped": int(faulted.curve("dropped").sum()),
+            "late": int(faulted.curve("late").sum()),
+            "rejected": int(faulted.curve("rejected").sum()),
+            "stale_merged": int(faulted.curve("stale_merged").sum()),
+            "deterministic": same,
+            "accuracy_curve_baseline": base.curve("accuracy").tolist(),
+            "accuracy_curve_faulted": faulted.curve("accuracy").tolist(),
+        }
+        rows.append(row)
+        emit(f"faults/{scenario}+{fault}",
+             (time.perf_counter() - t0) * 1e6 / max(len(rows), 1),
+             f"acc={row['acc_faulted']:.3f} "
+             f"degr={row['acc_degradation']:+.3f} "
+             f"delay_x={row['delay_inflation']:.2f} "
+             f"drop={row['dropped']} late={row['late']} "
+             f"rej={row['rejected']} merged={row['stale_merged']} "
+             f"det={same}")
+
+    doc = {
+        "bench": "fault-tolerant GenFV rounds (fl/faults.py schedules)",
+        "quick": quick,
+        "rounds": sizes["rounds"],
+        "pairs": rows,
+        "deterministic": deterministic,
+        "wall_s": time.perf_counter() - t0,
+    }
+    path = out or DEFAULT_OUT
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1)
+    return doc
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    doc = run(quick=args.quick, out=args.out)
+    return 0 if doc["deterministic"] else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

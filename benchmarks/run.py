@@ -10,10 +10,10 @@ import sys
 import time
 import traceback
 
-from benchmarks import (bench_planner, bench_rounds, bench_sweep,
-                        bench_world, fig5_emd, fig6_selection, fig7_power,
-                        fig8_subproblems, fig9_generation, fig10_noniid,
-                        roofline, theorem1)
+from benchmarks import (bench_faults, bench_planner, bench_rounds,
+                        bench_sweep, bench_world, fig5_emd, fig6_selection,
+                        fig7_power, fig8_subproblems, fig9_generation,
+                        fig10_noniid, roofline, theorem1)
 
 MODULES = {
     "fig5": fig5_emd.run,
@@ -28,6 +28,7 @@ MODULES = {
     "world": bench_world.run,            # sim world; full: -m benchmarks.bench_world
     "planner": bench_planner.run,        # two-scale planner; full: -m benchmarks.bench_planner
     "sweep": bench_sweep.run,            # repro.exp grid; full: -m benchmarks.bench_sweep
+    "faults": bench_faults.run,          # fault schedules; full: -m benchmarks.bench_faults
 }
 
 # FL-training-heavy modules skipped under --quick (the `sweep` smoke still

@@ -1,1 +1,2 @@
-from repro.checkpoint.io import save_tree, restore_tree, restore_into
+from repro.checkpoint.io import (read_manifest, restore_into, restore_tree,
+                                 save_tree)

@@ -1,9 +1,17 @@
 """Checkpointing: pytree <-> .npz with path-string keys + a JSON manifest.
 
 `save_tree` stores every leaf under its tree path ("params/groups/0/attn/wq")
-so checkpoints are inspectable with plain numpy. `restore_into` reloads into
-a template pytree (shape/dtype checked); `restore_tree` reloads standalone
-(dicts/lists/tuples reconstructed from the manifest).
+so checkpoints are inspectable with plain numpy. Writes are ATOMIC: the
+archive is assembled in a same-directory temp file and `os.replace`d into
+place, so a crash (or fault injection) mid-write can never corrupt an
+existing resume point — the old checkpoint stays readable
+(tests/test_property.py pins this with a simulated partial write).
+
+`restore_into` reloads into a template pytree (shape/dtype checked);
+`restore_tree` reloads standalone (dicts/lists/tuples reconstructed from the
+manifest); `read_manifest` returns just the manifest (keys, structure,
+metadata) without materializing any arrays — resume logic uses it to
+validate a checkpoint's config fingerprint before loading.
 """
 from __future__ import annotations
 
@@ -27,7 +35,9 @@ def _path_str(path) -> str:
     return "/".join(parts)
 
 
-def save_tree(path: str, tree: Any, metadata: dict | None = None) -> None:
+def save_tree(path: str, tree: Any, metadata: dict | None = None) -> str:
+    """Atomically write `tree` to `path` (.npz appended if missing, matching
+    np.savez). Returns the final path."""
     leaves_with_paths, treedef = jax.tree_util.tree_flatten_with_path(tree)
     arrays = {}
     keys = []
@@ -38,15 +48,34 @@ def save_tree(path: str, tree: Any, metadata: dict | None = None) -> None:
     manifest = {"keys": keys, "treedef": str(treedef),
                 "structure": _structure_of(tree),
                 "metadata": metadata or {}}
-    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
-    np.savez(path, __manifest__=json.dumps(manifest), **arrays)
+    if not path.endswith(".npz"):
+        path += ".npz"                    # np.savez's own suffix behavior
+    path = os.path.abspath(path)
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    # temp file in the SAME directory so os.replace is an atomic rename
+    tmp = f"{path}.tmp.{os.getpid()}"
+    try:
+        with open(tmp, "wb") as f:
+            np.savez(f, __manifest__=json.dumps(manifest), **arrays)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):           # only on failure: replace consumed it
+            os.unlink(tmp)
+    return path
 
 
 def _structure_of(tree) -> Any:
-    """JSON-serializable skeleton: leaves -> None."""
+    """JSON-serializable skeleton: leaves -> None. Dict items are recorded
+    in SORTED key order to match jax's tree_flatten ordering — with
+    insertion order a dict whose keys weren't inserted sorted would restore
+    its leaves scrambled (`_fill` walks the skeleton in the order written
+    here while the saved leaves follow jax's sorted flatten)."""
     if isinstance(tree, dict):
         return {"__kind__": "dict",
-                "items": {k: _structure_of(v) for k, v in tree.items()}}
+                "items": {k: _structure_of(tree[k])
+                          for k in sorted(tree.keys())}}
     if isinstance(tree, (list, tuple)):
         return {"__kind__": type(tree).__name__,
                 "items": [_structure_of(v) for v in tree]}
@@ -62,17 +91,24 @@ def _fill(skel, leaves_iter):
     return items if skel["__kind__"] == "list" else tuple(items)
 
 
+def read_manifest(path: str) -> dict:
+    """The checkpoint's manifest (keys, structure skeleton, metadata) without
+    loading any array payloads."""
+    with np.load(path, allow_pickle=False) as data:
+        return json.loads(str(data["__manifest__"]))
+
+
 def restore_tree(path: str) -> Any:
-    data = np.load(path, allow_pickle=False)
-    manifest = json.loads(str(data["__manifest__"]))
-    leaves = [data[k] for k in manifest["keys"]]
+    with np.load(path, allow_pickle=False) as data:
+        manifest = json.loads(str(data["__manifest__"]))
+        leaves = [data[k] for k in manifest["keys"]]
     return _fill(manifest["structure"], iter(leaves))
 
 
 def restore_into(template: Any, path: str) -> Any:
-    data = np.load(path, allow_pickle=False)
-    manifest = json.loads(str(data["__manifest__"]))
-    leaves = [data[k] for k in manifest["keys"]]
+    with np.load(path, allow_pickle=False) as data:
+        manifest = json.loads(str(data["__manifest__"]))
+        leaves = [data[k] for k in manifest["keys"]]
     t_leaves, treedef = jax.tree_util.tree_flatten(template)
     if len(t_leaves) != len(leaves):
         raise ValueError(f"leaf count mismatch: template {len(t_leaves)} "

@@ -100,6 +100,78 @@ def aggregate_stacked(stacked, weights, aug_model, aug_weight):
     return jax.tree.map(combine, stacked, aug_model)
 
 
+def aggregate_stacked_guarded(stacked, weights, aug_model, aug_weight,
+                              fallback):
+    """`aggregate_stacked` with a per-client finiteness guard: clients whose
+    update contains any NaN/Inf leaf are excluded from the federated term and
+    the surviving weights renormalized (fl/faults.py poison injection). If
+    EVERY client is rejected, the federated mass is redirected to `fallback`
+    (the round-start global), so a fully-poisoned round degrades to
+    "no federated progress" instead of collapsing the model toward zero.
+
+    Returns (aggregated, finite_mask [K] bool). Still a single traced
+    reduction — the mask is an all-leaves `isfinite` all-reduce per client,
+    fused into the same XLA program as the weighted sum.
+
+    Numerically neutral when every client is finite: rows pass through
+    `where(True, x, 0) = x`, the renormalization scale is `s/s = 1.0` and
+    `x * 1.0 = x` under IEEE-754, and the reduction stays the same ordered
+    unrolled chain as the unguarded kernel. NOTE this holds for the
+    aggregation epilogue in exact IEEE terms, but the guarded fleet dispatch
+    is still a *different fused XLA program* than the unguarded one, and the
+    upstream vmapped SGD may fuse differently (ULP-level loss drift) — which
+    is why fl/rounds.py dispatches this kernel only when a poisoned update
+    is actually inside the batch, keeping clean rounds bitwise on the seed
+    program (tests/test_faults.py pins that equivalence).
+    """
+    leaves = jax.tree_util.tree_leaves(stacked)
+    finite = jnp.ones(leaves[0].shape[0], bool)
+    for leaf in leaves:
+        flat = leaf.reshape(leaf.shape[0], -1)
+        finite = finite & jnp.all(jnp.isfinite(flat), axis=1)
+    w = weights * finite
+    s_all, s_fin = weights.sum(), w.sum()
+    # keep the federated mass kappa1 (= weights.sum over real slots) constant:
+    # surviving clients absorb the rejected clients' share.
+    scale = jnp.where(s_fin > 0, s_all / s_fin, 0.0)
+
+    def combine(s, a, fb):
+        s32 = s.astype(jnp.float32)
+        fed = w[0] * jnp.where(finite[0], s32[0], 0.0)
+        for i in range(1, s.shape[0]):
+            fed = fed + w[i] * jnp.where(finite[i], s32[i], 0.0)
+        fed = jnp.where(s_fin > 0, fed * scale,
+                        s_all * fb.astype(jnp.float32))
+        out = fed + aug_weight * a.astype(jnp.float32)
+        return out.astype(s.dtype)
+
+    return jax.tree.map(combine, stacked, aug_model, fallback), finite
+
+
+def tree_finite(tree) -> bool:
+    """Host-side: every leaf of the pytree is finite (sequential-path poison
+    filter)."""
+    return all(bool(np.isfinite(np.asarray(l)).all())
+               for l in jax.tree_util.tree_leaves(tree))
+
+
+def add_weighted(params, models: Sequence, weights: Sequence[float]):
+    """Host-side params + sum_i w_i * m_i with float32 accumulation —
+    staleness-discounted merge of buffered late updates into an already
+    aggregated global (fl/rounds.py)."""
+    if not models:
+        return params
+    ws = [float(w) for w in weights]
+
+    def combine(p, *ms):
+        acc = p.astype(jnp.float32)
+        for w, m in zip(ws, ms):
+            acc = acc + w * m.astype(jnp.float32)
+        return acc.astype(p.dtype)
+
+    return jax.tree.map(combine, params, *models)
+
+
 def lambda_bound(emd_n: float, g_n: float) -> float:
     """Eq. (3): gradient-divergence bound lambda_n <= EMD_n * g_n."""
     return emd_n * g_n

@@ -11,6 +11,7 @@ Token datasets provide LM training streams for the assigned backbones.
 """
 from __future__ import annotations
 
+import zlib
 from functools import lru_cache
 from typing import Tuple
 
@@ -18,6 +19,15 @@ import numpy as np
 
 DATASET_CLASSES = {"cifar10": 10, "cifar100": 100, "gtsrb": 43}
 IMG = 32
+
+
+def _stable_seed(*key) -> int:
+    """Process-independent pattern seed. Builtin `hash()` is salted by
+    PYTHONHASHSEED, which made class patterns differ between interpreter
+    runs — harmless for single-process golden tests but fatal for
+    cross-process checkpoint resume (and the occasional hash seed drew
+    near-degenerate class pairs)."""
+    return zlib.crc32("/".join(map(str, key)).encode())
 
 
 def _wave_pattern(seed: int, f_lo: float, f_hi: float, n_waves: int = 4
@@ -39,7 +49,7 @@ def _wave_pattern(seed: int, f_lo: float, f_hi: float, n_waves: int = 4
 def _coarse_pattern(name: str, cls: int) -> np.ndarray:
     """Low-frequency 'shape' component — SHARED between class pairs
     (cls // 2), mimicking the coarse structure a generative model captures."""
-    return _wave_pattern(abs(hash((name, "coarse", cls // 2))), 0.5, 2.5)
+    return _wave_pattern(_stable_seed(name, "coarse", cls // 2), 0.5, 2.5)
 
 
 @lru_cache(maxsize=None)
@@ -48,7 +58,7 @@ def _fine_pattern(name: str, cls: int) -> np.ndarray:
     detail that separates paired classes; the AIGC oracle cannot reproduce
     it (fl/generator.py), giving AIGC-only training its accuracy ceiling
     (paper Fig. 10-12)."""
-    return _wave_pattern(abs(hash((name, "fine", cls))), 6.0, 12.0)
+    return _wave_pattern(_stable_seed(name, "fine", cls), 6.0, 12.0)
 
 
 @lru_cache(maxsize=None)

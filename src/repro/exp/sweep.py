@@ -31,6 +31,7 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import os
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Sequence
 
@@ -49,7 +50,9 @@ SWEEP_SCHEMA = schema_tag("sweep")                     # repro.exp/sweep/v1
 
 #: RoundLog fields captured into the metric tensors.
 METRIC_KEYS = ("selected", "dropped", "t_bar", "b_gen", "kappa2",
-               "emd_bar", "loss", "accuracy")
+               "emd_bar", "loss", "accuracy",
+               # fault-tolerance ledger (fl/faults.py; zero on clean runs)
+               "late", "rejected", "stale_merged", "t_round")
 
 
 class _DatasetCache:
@@ -115,17 +118,79 @@ class Sweep:
                            dataset_fn=self._datasets)
 
     # ------------------------------------------------------------------
-    def run(self) -> "SweepResult":
+    # Sweep checkpointing (ROADMAP direction 5): per-cell runner snapshots
+    # plus a JSON manifest written LAST — the manifest is the commit point,
+    # so a kill mid-save is detected on resume (cell cursor mismatch) rather
+    # than silently resumed from torn state. Each cell file itself is
+    # written atomically (repro.checkpoint).
+    # ------------------------------------------------------------------
+    CKPT_SCHEMA = "repro.exp/sweep-ckpt/v1"
+
+    def _save_checkpoint(self, directory: str, runners, completed: int):
+        os.makedirs(directory, exist_ok=True)
+        for i, r in enumerate(runners):
+            r.save_checkpoint(os.path.join(directory, f"cell_{i:04d}.npz"))
+        man = {"schema": self.CKPT_SCHEMA, "spec": self.spec.to_payload(),
+               "completed_rounds": int(completed), "cells": len(runners)}
+        path = os.path.join(directory, "manifest.json")
+        tmp = f"{path}.tmp.{os.getpid()}"
+        with open(tmp, "w") as f:
+            json.dump(man, f, sort_keys=True)
+        os.replace(tmp, path)
+
+    def _try_resume(self, directory: str, runners) -> int:
+        """Load a previous checkpoint if one exists; returns the lockstep
+        round to resume at (0 = fresh start)."""
+        path = os.path.join(directory, "manifest.json")
+        if not os.path.exists(path):
+            return 0
+        with open(path) as f:
+            man = json.load(f)
+        if man.get("schema") != self.CKPT_SCHEMA:
+            raise ValueError(f"sweep checkpoint schema {man.get('schema')!r}"
+                             f" != {self.CKPT_SCHEMA!r}")
+        if man.get("spec") != self.spec.to_payload():
+            raise ValueError("sweep checkpoint belongs to a different "
+                             "ExperimentSpec; refusing to resume")
+        if man.get("cells") != len(runners):
+            raise ValueError(f"sweep checkpoint has {man.get('cells')} cells"
+                             f", spec expands to {len(runners)}")
+        completed = int(man["completed_rounds"])
+        for i, r in enumerate(runners):
+            r.load_checkpoint(os.path.join(directory, f"cell_{i:04d}.npz"))
+            want = min(completed, r.run.rounds)
+            if r.next_round != want:
+                raise ValueError(
+                    f"cell {i} checkpoint is at round {r.next_round}, "
+                    f"manifest says {want} — torn checkpoint (killed "
+                    "mid-save); delete the directory and restart")
+        return completed
+
+    # ------------------------------------------------------------------
+    def run(self, checkpoint_dir: str | None = None,
+            checkpoint_every: int = 1,
+            stop_after: int | None = None) -> "SweepResult":
+        """Execute the grid in round-lockstep. With `checkpoint_dir`, all
+        cell state is snapshotted every `checkpoint_every` lockstep rounds
+        and a later `run()` with the same directory resumes bitwise from
+        the last completed round. `stop_after` limits how many lockstep
+        rounds THIS call executes (tests use it to simulate a kill)."""
         cells = self.spec.expand()
         runners = [self._make_runner(c) for c in cells]
         n = len(cells)
         max_rounds = max(c.run.rounds for c in cells)
-        logs: List[List] = [[] for _ in range(n)]
+        start_round = 0
+        if checkpoint_dir is not None:
+            start_round = self._try_resume(checkpoint_dir, runners)
+        logs: List[List] = [list(r.logs) for r in runners]
         dispatches = 0
         batched_fleets = 0
         largest_batch = 0
+        executed = 0
 
-        for t in range(max_rounds):
+        for t in range(start_round, max_rounds):
+            if stop_after is not None and executed >= stop_after:
+                break
             active = [i for i in range(n) if t < cells[i].run.rounds]
             pending = {i: runners[i].begin_round(t) for i in active}
             plans: Dict[int, Any] = {}
@@ -163,6 +228,11 @@ class Sweep:
                           f" round {t:3d} sel={log.selected:2d}"
                           f" drop={log.dropped} t_bar={log.t_bar:5.2f}s"
                           f" loss={log.loss:.3f} acc={log.accuracy:.3f}")
+
+            executed += 1
+            if checkpoint_dir is not None and \
+                    (t + 1) % max(checkpoint_every, 1) == 0:
+                self._save_checkpoint(checkpoint_dir, runners, t + 1)
 
         meta = {
             "planner_dispatches": dispatches,

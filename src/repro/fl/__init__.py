@@ -1,3 +1,6 @@
+from repro.fl.faults import (FaultInjector, FaultSpec, RoundFaults,
+                             StaleBuffer, StaleEntry, fault_names, get_fault,
+                             register_fault)
 from repro.fl.fleet import FleetEngine
 from repro.fl.rounds import (PLANNERS, STRATEGIES, GenFVRunner, PendingRound,
                              RoundLog, RunConfig, RunResult,

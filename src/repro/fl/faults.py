@@ -1,0 +1,251 @@
+"""Seeded fault injection for GenFV rounds (ROADMAP direction 5).
+
+The paper's premise is FL that survives vehicular reality — churn, channel
+fades, heterogeneous compute — yet the base round loop models exactly one
+failure (coverage dropout) and discards every late or corrupted update. This
+module injects the other failure modes deterministically so robustness is a
+measurable, regression-testable property:
+
+  * compute stragglers  — per-vehicle slowdown multipliers on the eq.-6
+    training delay t_cp (thermal throttling, contended GPU);
+  * upload outages      — a deep shadow fade (dB) applied on top of the
+    vehicle's slow-fading gain, re-pricing eq.-10 upload time at the
+    planned (l, phi) allocation;
+  * forced departures   — extra mid-round exits beyond the world's natural
+    coverage churn (lane change, tunnel, ignition-off);
+  * poisoned updates    — NaN client deltas (malfunctioning or adversarial
+    OBU), caught by the in-kernel finiteness guard
+    (core/emd.py::aggregate_stacked_guarded).
+
+Determinism contract: every round draws from a fresh
+`SeedSequence(spec.seed, round)` stream in a FIXED order (slowdown, outage,
+departure, poison — k draws each), so faults are a pure function of
+(spec, round, fleet size). Identical across vectorized/sequential paths,
+across planner backends, and across checkpoint resume — the injector holds
+no mutable state.
+
+Recovery machinery lives here too: `StaleBuffer` keeps late-but-finite
+updates and releases them to the next FL round with staleness-discounted
+weights  rho_eff = rho * gamma^age  (gamma = spec.staleness_discount,
+age = merge_round - trained_round), dropping entries older than
+spec.max_staleness. arXiv:2401.09656 motivates merging stale vehicular
+updates instead of discarding them.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Sequence, Tuple
+
+import numpy as np
+
+from repro.configs.base import GenFVConfig
+from repro.core import channel, mobility
+
+__all__ = [
+    "FaultSpec", "RoundFaults", "FaultInjector", "StaleEntry", "StaleBuffer",
+    "register_fault", "get_fault", "fault_names", "realized_times",
+]
+
+
+@dataclass(frozen=True)
+class FaultSpec:
+    """One deterministic fault schedule. Frozen so it can ride inside
+    RunConfig-adjacent payloads and checkpoint metadata; all probabilities
+    are per-selected-vehicle per-round."""
+    seed: int = 0
+    start_round: int = 0            # first faulty round (inclusive)
+    end_round: int | None = None    # first clean round again (None = never)
+    straggler_prob: float = 0.0
+    straggler_slowdown: float = 3.0  # multiplier on t_cp when straggling
+    outage_prob: float = 0.0
+    outage_fade_db: float = 20.0     # extra shadow fade during an outage
+    departure_prob: float = 0.0
+    poison_prob: float = 0.0
+    # -- recovery policy ---------------------------------------------------
+    deadline_slack: float = 0.25     # deadline = t_bar * (1 + slack)
+    staleness_discount: float = 0.5  # gamma in rho_eff = rho * gamma^age
+    max_staleness: int = 2           # rounds a buffered update stays usable
+
+    def __post_init__(self):
+        for name in ("straggler_prob", "outage_prob", "departure_prob",
+                     "poison_prob"):
+            p = getattr(self, name)
+            if not 0.0 <= p <= 1.0:
+                raise ValueError(f"{name}={p} outside [0, 1]")
+        if self.straggler_slowdown < 1.0:
+            raise ValueError("straggler_slowdown must be >= 1 (it multiplies "
+                             "the planned training delay)")
+        if self.deadline_slack < 0.0:
+            raise ValueError("deadline_slack must be >= 0")
+        if not 0.0 < self.staleness_discount <= 1.0:
+            raise ValueError("staleness_discount must be in (0, 1]")
+        if self.max_staleness < 0:
+            raise ValueError("max_staleness must be >= 0")
+
+    def active(self, t: int) -> bool:
+        return t >= self.start_round and (self.end_round is None
+                                          or t < self.end_round)
+
+    def to_payload(self) -> dict:
+        import dataclasses
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_payload(cls, payload: dict) -> "FaultSpec":
+        return cls(**payload)
+
+
+# ---------------------------------------------------------------------------
+# Registry — named schedules referencable from RunConfig.faults (a plain
+# string, so frozen experiment cells stay hashable/serializable).
+# ---------------------------------------------------------------------------
+_REGISTRY: Dict[str, FaultSpec] = {}
+
+
+def register_fault(name: str, spec: FaultSpec) -> FaultSpec:
+    if name in _REGISTRY:
+        raise ValueError(f"fault schedule {name!r} already registered")
+    _REGISTRY[name] = spec
+    return spec
+
+
+def get_fault(name: str) -> FaultSpec:
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown fault schedule {name!r}; registered: "
+                       f"{', '.join(sorted(_REGISTRY))}")
+    return _REGISTRY[name]
+
+
+def fault_names() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+# The benchmark's headline schedules (bench_faults.py): platoon mass-dropout
+# stresses SUBP1's admission when a convoy exits together; rush-hour deep
+# fade stresses the deadline/staleness recovery path when uploads suddenly
+# cost 20 dB more at the planned (l, phi).
+register_fault("platoon_mass_dropout",
+               FaultSpec(seed=101, start_round=2, departure_prob=0.45,
+                         straggler_prob=0.15, straggler_slowdown=2.0))
+register_fault("rush_hour_deep_fade",
+               FaultSpec(seed=202, start_round=2, outage_prob=0.5,
+                         outage_fade_db=20.0, deadline_slack=0.25))
+register_fault("compute_stragglers",
+               FaultSpec(seed=303, straggler_prob=0.4,
+                         straggler_slowdown=4.0, deadline_slack=0.15))
+register_fault("poison_minority",
+               FaultSpec(seed=404, poison_prob=0.25))
+register_fault("mixed_stress",
+               FaultSpec(seed=505, start_round=1, straggler_prob=0.2,
+                         straggler_slowdown=3.0, outage_prob=0.2,
+                         departure_prob=0.1, poison_prob=0.1))
+
+
+# ---------------------------------------------------------------------------
+# Per-round realizations.
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class RoundFaults:
+    """One round's realized faults over the K selected vehicles."""
+    slowdown: np.ndarray   # [K] float, >= 1 (1 = nominal)
+    outage: np.ndarray     # [K] bool — deep fade on the upload
+    departed: np.ndarray   # [K] bool — forced mid-round exit
+    poisoned: np.ndarray   # [K] bool — NaN update
+
+    @property
+    def any(self) -> bool:
+        return bool((self.slowdown > 1.0).any() or self.outage.any()
+                    or self.departed.any() or self.poisoned.any())
+
+
+def _benign(k: int) -> RoundFaults:
+    return RoundFaults(np.ones(k), np.zeros(k, bool), np.zeros(k, bool),
+                       np.zeros(k, bool))
+
+
+class FaultInjector:
+    """Stateless draw engine: `draw(t, k)` is a pure function of
+    (spec.seed, t, k), so resume-from-checkpoint replays faults exactly
+    without persisting any injector state."""
+
+    def __init__(self, spec: FaultSpec):
+        self.spec = spec
+
+    def draw(self, t: int, k: int) -> RoundFaults:
+        if k == 0 or not self.spec.active(t):
+            return _benign(k)
+        s = self.spec
+        # round-keyed stream; FIXED draw order — never reorder these, the
+        # determinism guard in tests/test_faults.py pins realizations
+        rng = np.random.default_rng(
+            np.random.SeedSequence(entropy=(s.seed, t)))
+        slow = np.where(rng.random(k) < s.straggler_prob,
+                        s.straggler_slowdown, 1.0)
+        outage = rng.random(k) < s.outage_prob
+        departed = rng.random(k) < s.departure_prob
+        poisoned = rng.random(k) < s.poison_prob
+        # a departed vehicle's update never arrives; poisoning it is moot
+        poisoned &= ~departed
+        return RoundFaults(slow, outage, departed, poisoned)
+
+
+def realized_times(cfg: GenFVConfig, fleet: Sequence, plan,
+                   model_bits: float, rf: RoundFaults,
+                   fade_db: float) -> np.ndarray:
+    """Per-selected realized round time under faults: straggler-inflated
+    training plus the (possibly deep-faded) eq.-10 upload priced at the
+    PLANNED allocation (l, phi) — the RSU committed the schedule before the
+    fault materialized, which is exactly why a deadline is needed.
+    """
+    t_cp = rf.slowdown * np.asarray(plan.t_cp, np.float64)
+    t_mu = np.asarray(plan.t_mu, np.float64).copy()
+    if rf.outage.any():
+        idx = [plan.selected[i] for i in np.nonzero(rf.outage)[0]]
+        xs = np.array([fleet[j].x for j in idx], np.float64)
+        gains = np.array([fleet[j].gain_db for j in idx], np.float64)
+        dists = mobility.rsu_distances(cfg, xs)
+        t_mu[rf.outage] = channel.upload_times(
+            cfg, model_bits, np.asarray(plan.l, np.float64)[rf.outage],
+            np.asarray(plan.phi, np.float64)[rf.outage], dists,
+            gain_db=gains - fade_db)
+    return t_cp + t_mu
+
+
+# ---------------------------------------------------------------------------
+# Staleness buffer.
+# ---------------------------------------------------------------------------
+@dataclass
+class StaleEntry:
+    params: object          # the late client's trained model (pytree)
+    size: int               # |D_n|
+    emd: float              # EMD_n
+    trained_round: int      # round whose global it descended from
+    vid: int                # vehicle id (diagnostics)
+
+
+@dataclass
+class StaleBuffer:
+    """Late-but-finite updates waiting to be merged. FIFO per round; ages
+    are measured in completed rounds."""
+    entries: List[StaleEntry] = field(default_factory=list)
+
+    def push(self, entry: StaleEntry) -> None:
+        self.entries.append(entry)
+
+    def __len__(self) -> int:
+        return len(self.entries)
+
+    def pop_mergeable(self, t: int, max_staleness: int
+                      ) -> Tuple[List[StaleEntry], List[int]]:
+        """Drain the buffer for the merge at round `t`: returns
+        (mergeable entries, ages). Entries older than max_staleness are
+        dropped (too stale to help — arXiv:2401.09656's bounded-staleness
+        regime)."""
+        merge, ages = [], []
+        for e in self.entries:
+            age = t - e.trained_round
+            if age <= max_staleness:
+                merge.append(e)
+                ages.append(age)
+        self.entries = []
+        return merge, ages

@@ -35,7 +35,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.emd import aggregate_stacked, kappas
+from repro.core.emd import aggregate_stacked, aggregate_stacked_guarded, kappas
 # one bucket scheme for every padded dispatch in the repo: the fleet engine
 # and the batched planner share it (defined in core/planner.py; re-exported
 # here for existing callers)
@@ -69,6 +69,30 @@ _fleet_step_donated = partial(jax.jit, static_argnums=(0, 1, 2, 3),
 _fleet_step = partial(jax.jit, static_argnums=(0, 1, 2, 3))(_fleet_step_impl)
 
 
+def _fleet_step_guarded_impl(cfg, h: int, lr: float, prox_mu: float,
+                             global_params, imgs, labels, weights,
+                             aug_params, aug_weight):
+    """Fault-tolerant variant of the fused dispatch: identical vmapped local
+    SGD, but the aggregation rejects non-finite (poisoned) client updates
+    in-kernel and renormalizes survivor weights. Still one XLA program.
+
+    Returns (aggregated global params, losses [K,h], finite_mask [K]).
+    """
+    def one_vehicle(bi, bl):
+        return local_sgd_steps(global_params, cfg, bi, bl, h, lr, prox_mu)
+
+    stacked, losses = jax.vmap(one_vehicle)(imgs, labels)
+    new_global, finite = aggregate_stacked_guarded(
+        stacked, weights, aug_params, aug_weight, fallback=global_params)
+    return new_global, losses, finite
+
+
+_fleet_step_guarded_donated = partial(jax.jit, static_argnums=(0, 1, 2, 3),
+                                      donate_argnums=(4,))(_fleet_step_guarded_impl)
+_fleet_step_guarded = partial(jax.jit, static_argnums=(0, 1, 2, 3))(
+    _fleet_step_guarded_impl)
+
+
 class FleetEngine:
     """Round executor: sample -> pad to bucket -> one fused dispatch.
 
@@ -92,6 +116,8 @@ class FleetEngine:
             donate = jax.default_backend() != "cpu"
         self.donate = bool(donate)
         self._step = _fleet_step_donated if self.donate else _fleet_step
+        self._step_guarded = (_fleet_step_guarded_donated if self.donate
+                              else _fleet_step_guarded)
         self._zeros = None  # cached kappa2=0 stand-in for a missing aug model
 
     # -- host-side batch sampling (mirrors client_update's rng protocol) ---
@@ -103,15 +129,17 @@ class FleetEngine:
     # ----------------------------------------------------------------------
     def run(self, global_params, imgs_list: List, labels_list: List,
             rhos: Sequence[float], emd_bar: float = 0.0, aug_params=None,
-            prox_mu: float = 0.0, bucket: int | None = None
-            ) -> Tuple[object, np.ndarray]:
+            prox_mu: float = 0.0, bucket: int | None = None,
+            guard: bool = False) -> Tuple[object, np.ndarray]:
         """Train all K vehicles and aggregate, in one dispatch.
 
         imgs_list/labels_list: per-vehicle stacked batches ([h,B,H,W,C] /
         [h,B]); rhos: data weights over the K vehicles; aug_params: the
         RSU-augmented model (None -> plain weighted FedAvg, kappa2 = 0).
         `global_params` must be treated as consumed (donated on
-        accelerators). Returns (new globals, mean loss [K]).
+        accelerators). Returns (new globals, mean loss [K]); with
+        guard=True (fault-injection runs) the guarded dispatch is used and a
+        third element — per-vehicle finite mask [K] — is returned.
         """
         k = len(imgs_list)
         if k == 0:
@@ -143,8 +171,12 @@ class FleetEngine:
         weights = np.zeros(kb, np.float32)
         weights[:k] = k1 * np.asarray(rhos, np.float64)
 
-        new_params, losses = self._step(
-            self.cfg, self.h, self.lr, float(prox_mu), global_params,
-            jnp.asarray(imgs), jnp.asarray(labels), jnp.asarray(weights),
-            aug_params, jnp.float32(k2))
+        args = (self.cfg, self.h, self.lr, float(prox_mu), global_params,
+                jnp.asarray(imgs), jnp.asarray(labels), jnp.asarray(weights),
+                aug_params, jnp.float32(k2))
+        if guard:
+            new_params, losses, finite = self._step_guarded(*args)
+            return (new_params, np.asarray(losses[:k]).mean(axis=1),
+                    np.asarray(finite[:k]))
+        new_params, losses = self._step(*args)
         return new_params, np.asarray(losses[:k]).mean(axis=1)

@@ -12,6 +12,8 @@ Each round:
 """
 from __future__ import annotations
 
+import dataclasses
+import json
 from dataclasses import dataclass, field
 from typing import Callable, List
 
@@ -19,21 +21,27 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.checkpoint import read_manifest, restore_tree, save_tree
 from repro.configs.base import GenFVConfig
 from repro.configs.genfv_cifar import CNNConfig, cnn_config
 from repro.core import mobility, plan_round
+from repro.core.emd import add_weighted, tree_finite
 from repro.core.generation import label_schedule
 from repro.core.planner import RoundPlan
 from repro.core.selection import (dropout_mask, select, select_madca,
                                   select_no_emd, select_ocean, select_random)
 from repro.data.partition import dirichlet_partition
 from repro.data.synthetic import DATASET_CLASSES, make_image_dataset
-from repro.fl.client import client_update
+from repro.fl.client import client_update, local_sgd
+from repro.fl.faults import (FaultInjector, FaultSpec, StaleBuffer,
+                             StaleEntry, fault_names, get_fault,
+                             realized_times)
 from repro.fl.fleet import FleetEngine
 from repro.fl.generator import OracleGenerator
 from repro.fl.server import GenFVServer
 from repro.models.cnn import cnn_forward, init_cnn
-from repro.sim import LEGACY, VehicularWorld, get_scenario, scenario_names
+from repro.sim import LEGACY, VehicularWorld, WorldState, get_scenario, \
+    scenario_names
 
 STRATEGIES = ("genfv", "fedavg", "no_emd", "madca", "ocean",
               "fl_only", "aigc_only", "fedprox")
@@ -47,7 +55,7 @@ CLIENT_LR = 5e-2
 
 
 def validate_run_fields(strategy: str, scenario: str, planner: str,
-                        dataset: str) -> None:
+                        dataset: str, faults: str | None = None) -> None:
     """Registry validation shared by `RunConfig` and `repro.exp`'s
     `ExperimentSpec`: unknown names used to fail deep inside the round loop
     (or silently fall through string compares in `_alpha`); now they raise
@@ -66,6 +74,10 @@ def validate_run_fields(strategy: str, scenario: str, planner: str,
     if dataset not in DATASET_CLASSES:
         raise ValueError(f"unknown dataset {dataset!r}; valid: "
                          f"{', '.join(DATASET_CLASSES)}")
+    if faults is not None and faults not in fault_names():
+        raise ValueError(f"unknown fault schedule {faults!r}; registered: "
+                         f"{', '.join(fault_names())} (or None for a "
+                         "fault-free run)")
 
 
 def eval_stream_seed(seed: int) -> int:
@@ -100,10 +112,14 @@ class RunConfig:
     # SUBP2-4 backend: "jax" (jitted/batched XLA kernel, default) or
     # "numpy" (host reference solver; pins the paper math bit-for-bit)
     planner: str = "jax"
+    # Named fault schedule from fl/faults.py's registry, or None for the
+    # fault-free loop (which then executes byte-identically to the seed:
+    # tests/test_faults.py pins the no-injection equivalence).
+    faults: str | None = None
 
     def __post_init__(self):
         validate_run_fields(self.strategy, self.scenario, self.planner,
-                            self.dataset)
+                            self.dataset, self.faults)
 
 
 @dataclass
@@ -117,6 +133,11 @@ class RoundLog:
     loss: float
     accuracy: float
     dropped: int = 0     # selected vehicles that left coverage mid-round
+    # -- fault-tolerance ledger (fl/faults.py; all zero on fault-free runs) --
+    late: int = 0          # missed the round deadline (straggler/outage)
+    rejected: int = 0      # non-finite (poisoned) updates the guard refused
+    stale_merged: int = 0  # buffered late updates merged this round
+    t_round: float = 0.0   # realized wall-clock (= t_bar without faults)
 
 
 @dataclass
@@ -138,9 +159,13 @@ class PendingRound:
 
 
 class GenFVRunner:
+    #: manifest schema of `save_checkpoint` (bump on layout changes)
+    CKPT_SCHEMA = "repro.fl/runner-ckpt/v1"
+
     def __init__(self, run: RunConfig, fl_cfg: GenFVConfig | None = None,
                  generator=None, engine: FleetEngine | None = None,
-                 dataset_fn: Callable | None = None):
+                 dataset_fn: Callable | None = None,
+                 faults: FaultSpec | None = None):
         self.run = run
         self.cfg = fl_cfg or GenFVConfig(dirichlet_alpha=run.alpha)
         self.scenario = None if run.scenario == LEGACY \
@@ -201,6 +226,16 @@ class GenFVRunner:
                                       max_bucket=4096)
         self.classes = classes
         self.b_prev = 0
+        # -- fault tolerance (tentpole; all dormant when spec is None) -----
+        # explicit FaultSpec overrides the RunConfig's registry name (ad-hoc
+        # schedules in tests/benchmarks without registering them)
+        spec = faults if faults is not None else (
+            get_fault(run.faults) if run.faults is not None else None)
+        self.faults = FaultInjector(spec) if spec is not None else None
+        self.stale = StaleBuffer()
+        # -- resumable execution: completed-round log + cursor -------------
+        self.logs: List[RoundLog] = []
+        self.next_round = 0
         cfg_cnn = self.cnn_cfg
         self._eval = jax.jit(
             lambda p, x, y: jnp.mean(
@@ -263,12 +298,37 @@ class GenFVRunner:
 
     def finish_round(self, pending: PendingRound, plan: RoundPlan) -> RoundLog:
         """Phase 3: execute the planned round (training, generation,
-        aggregation, world step, eval)."""
+        aggregation, world step, eval).
+
+        With a `FaultSpec` attached the round additionally realizes that
+        schedule's faults, enforces a deadline of t_bar*(1+slack), buffers
+        late-but-finite updates for a staleness-discounted merge in a later
+        round and rejects poisoned ones via the in-kernel finiteness guard
+        (fl/faults.py). Without one every branch below reduces bitwise to
+        the seed semantics (tests/test_faults.py pins the equivalence)."""
         run = self.run
         cfg = self.cfg
         t = pending.t
         fleet, parts = pending.fleet, pending.parts
         self.b_prev = plan.b_gen
+
+        # ---- fault realization + round deadline ---------------------------
+        spec = self.faults.spec if self.faults is not None else None
+        rf = None
+        late_mask = None
+        t_round = plan.t_bar
+        if spec is not None and plan.selected:
+            rf = self.faults.draw(t, len(plan.selected))
+            t_real = realized_times(cfg, fleet, plan, self.model_bits, rf,
+                                    spec.outage_fade_db)
+            deadline = plan.t_bar * (1.0 + spec.deadline_slack)
+            late_mask = (t_real > deadline) & ~rf.departed
+            # the RSU holds the round open until the last on-time upload —
+            # or until the deadline, once anyone misses it / departs
+            if late_mask.any() or rf.departed.any():
+                t_round = float(deadline)
+            else:
+                t_round = float(max(plan.t_bar, float(t_real.max())))
 
         # Mid-round dropout (persistent world only): SUBP1 admitted against
         # min(t_hold, t_max), but the realized straggler window plan.t_bar is
@@ -279,7 +339,7 @@ class GenFVRunner:
         survive = None
         dropped = 0
         if self.world is not None and plan.selected:
-            t_run = min(plan.t_bar, cfg.t_max)
+            t_run = min(t_round, cfg.t_max)
             survive = dropout_mask(cfg, fleet, plan.selected, t_run)
 
         use_aigc = run.strategy in ("genfv", "aigc_only")
@@ -302,20 +362,57 @@ class GenFVRunner:
                 loss = aug_loss
 
         n_trained = 0
+        late = rejected = stale_merged = 0
+        forced_out: List[int] = []        # vids force-departed this round
         msizes, memds = [], []
+        # buffered late updates from EARLIER rounds become mergeable now
+        # (drained before this round's stragglers are pushed)
+        stale_entries, stale_ages = [], []
+        if spec is not None and use_fl:
+            stale_entries, stale_ages = self.stale.pop_mergeable(
+                t, spec.max_staleness)
         if use_fl:
             models = []                # sequential reference path
+            fsizes = []                # sizes of the finite (kept) models
             bimgs, blabels = [], []    # vectorized engine path
+            n_poison = 0               # poisoned batches inside the dispatch
             for pos, j in enumerate(plan.selected):
                 if survive is not None and not survive[pos]:
                     dropped += 1
+                    continue
+                if rf is not None and rf.departed[pos]:
+                    dropped += 1       # forced exit: the update never arrives
+                    forced_out.append(fleet[j].vid)
                     continue
                 v = fleet[j]
                 di, dl = self.client_data[parts[j]]
                 if len(dl) < 2:
                     continue
+                is_late = late_mask is not None and bool(late_mask[pos])
+                is_poisoned = rf is not None and bool(rf.poisoned[pos])
                 if run.vectorized:
                     bi, bl = self.engine.sample_batches(self.rng, di, dl)
+                    if is_late:
+                        # missed the deadline: train on the already-sampled
+                        # batches outside the fused dispatch and buffer the
+                        # update for a staleness-discounted merge next round
+                        late += 1
+                        if is_poisoned:
+                            rejected += 1   # poisoned AND late: never merged
+                        else:
+                            m, _ = local_sgd(self.server.params, self.cnn_cfg,
+                                             jnp.asarray(bi), jnp.asarray(bl),
+                                             cfg.local_steps, CLIENT_LR,
+                                             prox_mu)
+                            self.stale.push(StaleEntry(m, v.data_size, v.emd,
+                                                       t, v.vid))
+                        continue
+                    if is_poisoned:
+                        # NaN batches corrupt the update inside the fused
+                        # dispatch; the in-kernel finiteness guard rejects it
+                        # there (one XLA program either way)
+                        bi = np.full_like(bi, np.nan)
+                        n_poison += 1
                     bimgs.append(bi)
                     blabels.append(bl)
                 else:
@@ -323,19 +420,87 @@ class GenFVRunner:
                                          di, dl, self.rng, cfg.local_steps,
                                          cfg.batch_size, lr=CLIENT_LR,
                                          prox_mu=prox_mu)
+                    if is_poisoned:
+                        m = jax.tree.map(
+                            lambda x: jnp.full_like(x, jnp.nan), m)
+                    if is_late:
+                        late += 1
+                        if tree_finite(m):
+                            self.stale.push(StaleEntry(m, v.data_size, v.emd,
+                                                       t, v.vid))
+                        else:
+                            rejected += 1
+                        continue
+                    if spec is not None and not tree_finite(m):
+                        # host-side guard (reference path): the vehicle still
+                        # counts as a participant (it trained and uploaded;
+                        # mirrors the in-kernel guard's accounting) but its
+                        # weight mass renormalizes onto the finite survivors
+                        rejected += 1
+                        msizes.append(v.data_size)
+                        memds.append(v.emd)
+                        continue
                     models.append(m)
+                    fsizes.append(v.data_size)
                     loss += l
                 msizes.append(v.data_size)
                 memds.append(v.emd)
             n_trained = len(msizes)
+
+            # staleness-discounted weights: rho_eff ∝ |D_n| * gamma^age,
+            # normalized jointly with the fresh participants (fl/faults.py)
+            s_models = [e.params for e in stale_entries]
+            s_sizes = [e.size * spec.staleness_discount ** a
+                       for e, a in zip(stale_entries, stale_ages)]
+            s_emds = [e.emd for e in stale_entries]
+            stale_merged = len(stale_entries)
+
             if run.vectorized and bimgs:
-                _, (k1, k2), losses = self.server.fleet_round(
-                    self.engine, bimgs, blabels, msizes, memds,
-                    aug if use_aigc else None, prox_mu)
-                loss = float(losses.mean())
+                if spec is not None and (n_poison or s_models):
+                    # recovery dispatch: joint fresh+stale weights, and the
+                    # guarded kernel IFF a poisoned batch is actually inside
+                    # it. The guard is numerically neutral on finite inputs,
+                    # but it is a different fused XLA program (ULP-level
+                    # drift in the vmapped SGD), so clean rounds must keep
+                    # dispatching the seed's kernel to stay bitwise.
+                    all_sizes = np.asarray(list(msizes) + s_sizes, np.float64)
+                    rho_all = all_sizes / max(all_sizes.sum(), 1.0)
+                    emds_all = memds + s_emds
+                    out = self.server.fleet_round(
+                        self.engine, bimgs, blabels, msizes, memds,
+                        aug if use_aigc else None, prox_mu,
+                        guard=bool(n_poison),
+                        rhos=rho_all[:len(msizes)] if s_models else None,
+                        kappa_emds=emds_all if s_models else None)
+                    if n_poison:
+                        _, (k1, k2), losses, finite = out
+                        rejected += int((~finite).sum())
+                        loss = float(losses[finite].mean()) if finite.any() \
+                            else 0.0
+                    else:
+                        _, (k1, k2), losses = out
+                        loss = float(losses.mean())
+                    if s_models:
+                        w = (k1 * rho_all[len(msizes):]).tolist()
+                        self.server.params = add_weighted(
+                            self.server.params, s_models, w)
+                else:
+                    _, (k1, k2), losses = self.server.fleet_round(
+                        self.engine, bimgs, blabels, msizes, memds,
+                        aug if use_aigc else None, prox_mu)
+                    loss = float(losses.mean())
             else:
+                if spec is not None and not models and not s_models and msizes:
+                    # every upload rejected: the federated mass degrades to
+                    # the round-start global (no federated progress), mirroring
+                    # the guarded kernel's all-poisoned fallback
+                    models, fsizes = [self.server.params], [sum(msizes)]
+                # sizes follow the KEPT models (guard-renormalized weights);
+                # the kappa2 EMD pool spans every participant, matching the
+                # vectorized kernel's accounting
                 _, (k1, k2) = self.server.aggregate(
-                    models, msizes, memds, aug if use_aigc else None)
+                    models + s_models, list(fsizes) + s_sizes,
+                    memds + s_emds, aug if use_aigc else None)
                 loss = loss / max(len(models), 1)
 
         if run.strategy == "aigc_only":
@@ -346,32 +511,169 @@ class GenFVRunner:
             emd_bar = float(np.mean(memds)) if memds else 0.0
 
         # advance the world by the realized round wall-clock: the straggler
-        # window (or the RSU's generation window if longer — AIGC strategies
-        # only), floored so an empty round still consumes its scheduling
-        # slot, capped at t_max
+        # window — deadline-extended under faults — (or the RSU's generation
+        # window if longer — AIGC strategies only), floored so an empty round
+        # still consumes its scheduling slot, capped at t_max
         if self.world is not None:
+            if forced_out:
+                # fault-injected departures leave before the step (no RNG
+                # consumed, so a benign spec leaves the stream untouched)
+                self.world.remove(forced_out)
             t_rsu = plan.t_rsu if use_aigc else 0.0
-            dt = max(plan.t_bar, t_rsu) if plan.selected else cfg.t_max
+            dt = max(t_round, t_rsu) if plan.selected else cfg.t_max
             self.world.step(self.rng,
                             float(np.clip(dt, 0.25 * cfg.t_max, cfg.t_max)))
 
         acc = float(self._eval(self.server.params, self.test_imgs,
                                self.test_labels))
-        return RoundLog(t, n_trained, plan.t_bar, plan.b_gen, k2,
-                        emd_bar, float(loss), acc, dropped)
+        log = RoundLog(t, n_trained, plan.t_bar, plan.b_gen, k2,
+                       emd_bar, float(loss), acc, dropped, late, rejected,
+                       stale_merged, float(t_round))
+        self.logs.append(log)
+        self.next_round = t + 1
+        return log
 
     def run_round(self, t: int) -> RoundLog:
         pending = self.begin_round(t)
         return self.finish_round(pending, self.plan(pending))
 
     # ------------------------------------------------------------------
-    def train(self, verbose: bool = False) -> RunResult:
-        res = RunResult()
-        for t in range(self.run.rounds):
+    def train(self, verbose: bool = False, checkpoint_path: str | None = None,
+              checkpoint_every: int = 1) -> RunResult:
+        """Run (or resume) the remaining rounds. A freshly-constructed
+        runner starts at round 0; after `load_checkpoint` the loop continues
+        at the first incomplete round and the returned RunResult still spans
+        all completed rounds. With `checkpoint_path`, state is saved
+        atomically every `checkpoint_every` completed rounds."""
+        for t in range(self.next_round, self.run.rounds):
             log = self.run_round(t)
-            res.logs.append(log)
             if verbose:
                 print(f"[{self.run.strategy}] round {t:3d} sel={log.selected:2d} "
                       f"drop={log.dropped} t_bar={log.t_bar:5.2f}s b={log.b_gen:4d} "
                       f"k2={log.kappa2:.3f} loss={log.loss:.3f} acc={log.accuracy:.3f}")
-        return res
+            if checkpoint_path is not None and \
+                    (t + 1) % max(checkpoint_every, 1) == 0:
+                self.save_checkpoint(checkpoint_path)
+        return RunResult(list(self.logs))
+
+    # ------------------------------------------------------------------
+    # Resumable execution (ROADMAP direction 5). The runner's complete
+    # mutable state is: global params, the single shared numpy Generator
+    # (server and world hold it by identity), b_prev, the completed-round
+    # logs, the AIGC pool, the world arrays and the staleness buffer.
+    # Fault draws are round-keyed (fl/faults.py) and the datasets/partition
+    # are a pure function of RunConfig, so nothing else needs persisting —
+    # a resumed run replays the remaining rounds bitwise
+    # (tests/test_faults.py golden resume, both planner backends).
+    # ------------------------------------------------------------------
+    _LOG_INT_FIELDS = ("round", "selected", "b_gen", "dropped", "late",
+                       "rejected", "stale_merged")
+
+    def _logs_state(self) -> dict:
+        return {f.name: np.asarray([getattr(l, f.name) for l in self.logs],
+                                   np.int64 if f.name in self._LOG_INT_FIELDS
+                                   else np.float64)
+                for f in dataclasses.fields(RoundLog)}
+
+    def save_checkpoint(self, path: str) -> str:
+        """Atomic snapshot of all mutable round state (repro.checkpoint)."""
+        rng_state = np.frombuffer(
+            json.dumps(self.rng.bit_generator.state).encode(), np.uint8)
+        state = {
+            "rng": rng_state.copy(),
+            "b_prev": np.int64(self.b_prev),
+            "next_round": np.int64(self.next_round),
+            "params": self.server.params,
+            "logs": self._logs_state(),
+            "pool": ({} if self.server.pool_imgs is None else
+                     {"imgs": self.server.pool_imgs,
+                      "labels": self.server.pool_labels}),
+            "world": ({} if self.world is None else {
+                "arrays": dataclasses.asdict(self.world.state),
+                "free": np.asarray(self.world._free, np.int64),
+                "next_vid": np.int64(self.world._next_vid),
+                "stats": {k: np.float64(v) for k, v in
+                          dataclasses.asdict(self.world.stats).items()},
+            }),
+            "stale": ({} if not self.stale.entries else {
+                "params": [e.params for e in self.stale.entries],
+                "size": np.asarray([e.size for e in self.stale.entries],
+                                   np.int64),
+                "emd": np.asarray([e.emd for e in self.stale.entries],
+                                  np.float64),
+                "trained_round": np.asarray(
+                    [e.trained_round for e in self.stale.entries], np.int64),
+                "vid": np.asarray([e.vid for e in self.stale.entries],
+                                  np.int64),
+            }),
+        }
+        meta = {"schema": self.CKPT_SCHEMA,
+                "run": dataclasses.asdict(self.run)}
+        return save_tree(path, state, metadata=meta)
+
+    def load_checkpoint(self, path: str) -> int:
+        """Restore a `save_checkpoint` snapshot into this (freshly
+        constructed, identically configured) runner. Returns the next round
+        to execute; `train()` continues from there."""
+        meta = read_manifest(path)["metadata"]
+        if meta.get("schema") != self.CKPT_SCHEMA:
+            raise ValueError(f"checkpoint schema {meta.get('schema')!r} != "
+                             f"{self.CKPT_SCHEMA!r}")
+        if meta.get("run") != dataclasses.asdict(self.run):
+            raise ValueError(
+                "checkpoint was written by a different RunConfig: "
+                f"{meta.get('run')} vs {dataclasses.asdict(self.run)}")
+        state = restore_tree(path)
+
+        self.rng.bit_generator.state = json.loads(
+            bytes(np.asarray(state["rng"], np.uint8)).decode())
+        self.b_prev = int(state["b_prev"])
+        self.next_round = int(state["next_round"])
+        self.server.params = jax.tree.map(jnp.asarray, state["params"])
+        logs = state["logs"]
+        names = [f.name for f in dataclasses.fields(RoundLog)]
+        self.logs = [
+            RoundLog(**{n: (int(logs[n][i]) if n in self._LOG_INT_FIELDS
+                            else float(logs[n][i])) for n in names})
+            for i in range(len(logs["round"]))]
+        pool = state["pool"]
+        self.server.pool_imgs = (np.asarray(pool["imgs"], np.float32)
+                                 if pool else None)
+        self.server.pool_labels = (np.asarray(pool["labels"], np.int32)
+                                   if pool else None)
+        if self.world is not None:
+            w = state["world"]
+            if not w:
+                raise ValueError("checkpoint has no world state but this "
+                                 "run uses a persistent scenario")
+            a = w["arrays"]
+            self.world.state = WorldState(
+                vid=np.asarray(a["vid"], np.int64),
+                x=np.asarray(a["x"], np.float64),
+                v=np.asarray(a["v"], np.float64),
+                phi_max=np.asarray(a["phi_max"], np.float64),
+                f_mem=np.asarray(a["f_mem"], np.float64),
+                f_core=np.asarray(a["f_core"], np.float64),
+                v_core=np.asarray(a["v_core"], np.float64),
+                shadow_db=np.asarray(a["shadow_db"], np.float64),
+                partition=np.asarray(a["partition"], np.int64))
+            self.world._free = [int(p) for p in np.asarray(w["free"])]
+            self.world._next_vid = int(w["next_vid"])
+            st = w["stats"]
+            self.world.stats.time = float(st["time"])
+            self.world.stats.steps = int(st["steps"])
+            self.world.stats.arrivals = int(st["arrivals"])
+            self.world.stats.departures = int(st["departures"])
+            self.world.stats.blocked_arrivals = int(st["blocked_arrivals"])
+            self.world._hists_src = None    # invalidate the hist cache
+        stale = state["stale"]
+        self.stale = StaleBuffer()
+        if stale:
+            for i in range(len(stale["size"])):
+                self.stale.push(StaleEntry(
+                    params=jax.tree.map(jnp.asarray, stale["params"][i]),
+                    size=int(stale["size"][i]),
+                    emd=float(stale["emd"][i]),
+                    trained_round=int(stale["trained_round"][i]),
+                    vid=int(stale["vid"][i])))
+        return self.next_round

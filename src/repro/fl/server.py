@@ -43,26 +43,43 @@ class GenFVServer:
     # ---- fused vehicle SGD + aggregation (fleet engine path) --------------
     def fleet_round(self, engine, imgs_list: List, labels_list: List,
                     sizes: Sequence[int], emds: Sequence[float],
-                    aug_model=None, prox_mu: float = 0.0):
+                    aug_model=None, prox_mu: float = 0.0, *,
+                    guard: bool = False, rhos=None, kappa_emds=None):
         """Run all selected vehicles' local SGD and the eq. (4) aggregation
         as one fused dispatch (fl/fleet.py). `self.params` is donated to the
         dispatch and rebound to the aggregated output. The sequential
-        reference path is `client_update` per vehicle + `aggregate`."""
-        rhos = data_weights(sizes)
-        emd_bar = mean_emd(emds) if aug_model is not None else 0.0
+        reference path is `client_update` per vehicle + `aggregate`.
+
+        Fault-tolerance hooks (fl/faults.py callers only; defaults keep the
+        fault-free dispatch byte-identical): `guard=True` switches to the
+        finiteness-guarded kernel and returns a 4th element (finite mask);
+        `rhos` overrides the data weights (the round loop pre-computes them
+        jointly over fresh + buffered-stale participants); `kappa_emds`
+        decouples the kappa2 EMD pool from `emds` for the same reason."""
+        rhos = data_weights(sizes) if rhos is None \
+            else np.asarray(rhos, np.float64)
+        emd_bar = mean_emd(emds if kappa_emds is None else kappa_emds) \
+            if aug_model is not None else 0.0
+        if guard:
+            self.params, losses, finite = engine.run(
+                self.params, imgs_list, labels_list, rhos, emd_bar,
+                aug_model, prox_mu, guard=True)
+            return self.params, kappas(emd_bar), losses, finite
         self.params, losses = engine.run(self.params, imgs_list, labels_list,
                                          rhos, emd_bar, aug_model, prox_mu)
         return self.params, kappas(emd_bar), losses
 
     # ---- aggregation (eq. 4) ----------------------------------------------
     def aggregate(self, vehicle_models: List, sizes: Sequence[int],
-                  emds: Sequence[float], aug_model=None):
+                  emds: Sequence[float], aug_model=None, *,
+                  rhos=None, kappa_emds=None):
         if not vehicle_models:
             if aug_model is not None:
                 self.params = aug_model
             return self.params, (1.0, 0.0)
-        rhos = data_weights(sizes)
-        emd_bar = mean_emd(emds)
+        rhos = data_weights(sizes) if rhos is None \
+            else np.asarray(rhos, np.float64)
+        emd_bar = mean_emd(emds if kappa_emds is None else kappa_emds)
         if aug_model is None:
             # FL-only: plain weighted FedAvg (kappa2 = 0)
             aug_model = vehicle_models[0]

@@ -41,7 +41,8 @@ class Request:
 def _merge_lane(cache, lane_cache, row: int):
     """Copy lane 0 of `lane_cache` into batch row `row` of `cache`."""
     def merge(dst, src):
-        if dst.ndim == 0 or dst.shape == src.shape and dst.ndim == 0:
+        # scalar leaf (no batch dim to row-assign): take the lane's value
+        if dst.ndim == 0:
             return src
         # find the batch dim: first dim where dst is engine-batch-sized and
         # src is 1 (single-lane prefill). Caches built by init_cache keep

@@ -207,6 +207,32 @@ class VehicularWorld:
         self.stats.steps += 1
 
     # ------------------------------------------------------------------
+    def remove(self, vids: Sequence[int]) -> int:
+        """Force-remove vehicles by id (fault-injected mid-round departures,
+        fl/faults.py): they leave coverage immediately, releasing their data
+        partitions exactly like a natural chord exit. Draws no RNG, so the
+        subsequent `step` consumes the stream identically whether or not a
+        removal happened. Returns the number actually removed (ids already
+        gone are ignored)."""
+        if len(vids) == 0:
+            return 0
+        st = self.state
+        drop = np.isin(st.vid, np.asarray(list(vids), np.int64))
+        gone = np.flatnonzero(drop)
+        if gone.size == 0:
+            return 0
+        released = st.partition[gone]
+        self._free.extend(int(p) for p in released if p >= 0)
+        self.stats.departures += int(gone.size)
+        keep = ~drop
+        self.state = WorldState(
+            vid=st.vid[keep], x=st.x[keep], v=st.v[keep],
+            phi_max=st.phi_max[keep], f_mem=st.f_mem[keep],
+            f_core=st.f_core[keep], v_core=st.v_core[keep],
+            shadow_db=st.shadow_db[keep], partition=st.partition[keep])
+        return int(gone.size)
+
+    # ------------------------------------------------------------------
     @property
     def n(self) -> int:
         """Live vehicles on the road (bound + unbound)."""

@@ -1,0 +1,371 @@
+"""Fault tolerance (fl/faults.py + the rounds.py recovery path): registry
+and spec validation, round-keyed injection determinism, the no-injection
+bitwise equivalence, staleness-weighted straggler recovery, the in-kernel
+poison guard, golden checkpoint resume on both planner backends, and the
+resumable sweep."""
+import dataclasses
+import json
+import os
+import subprocess
+import sys
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import GenFVConfig
+from repro.core.emd import aggregate_stacked, aggregate_stacked_guarded, \
+    tree_finite
+from repro.exp import ExperimentSpec, Sweep
+from repro.fl.faults import (FaultInjector, FaultSpec, StaleBuffer,
+                             StaleEntry, fault_names, get_fault,
+                             register_fault)
+from repro.fl.rounds import GenFVRunner, RunConfig
+
+REPO_ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+FAST = dict(rounds=3, train_size=300, test_size=32, width_mult=0.0625)
+FAST_CFG = GenFVConfig(batch_size=8, local_steps=2, num_vehicles=6)
+
+#: RoundLog curves compared in the determinism / parity / resume tests
+LOG_KEYS = ("selected", "dropped", "late", "rejected", "stale_merged",
+            "t_bar", "t_round", "b_gen", "kappa2", "emd_bar", "loss",
+            "accuracy")
+
+
+def _curves(res):
+    return {k: res.curve(k) for k in LOG_KEYS}
+
+
+def _assert_same(res_a, res_b, keys=LOG_KEYS):
+    ca, cb = _curves(res_a), _curves(res_b)
+    for k in keys:
+        np.testing.assert_array_equal(ca[k], cb[k], err_msg=k)
+
+
+# ---------------------------------------------------------------------------
+# Registry + spec validation
+# ---------------------------------------------------------------------------
+def test_registry_presets():
+    names = fault_names()
+    for required in ("platoon_mass_dropout", "rush_hour_deep_fade",
+                     "compute_stragglers", "poison_minority", "mixed_stress"):
+        assert required in names
+    with pytest.raises(KeyError, match="unknown fault schedule"):
+        get_fault("solar_flare")
+    with pytest.raises(ValueError, match="already registered"):
+        register_fault("mixed_stress", FaultSpec())
+
+
+@pytest.mark.parametrize("kw,fragment", [
+    (dict(straggler_prob=1.5), "outside"),
+    (dict(outage_prob=-0.1), "outside"),
+    (dict(straggler_slowdown=0.5), "slowdown"),
+    (dict(deadline_slack=-1.0), "deadline_slack"),
+    (dict(staleness_discount=0.0), "staleness_discount"),
+    (dict(max_staleness=-1), "max_staleness"),
+])
+def test_spec_validation(kw, fragment):
+    with pytest.raises(ValueError, match=fragment):
+        FaultSpec(**kw)
+
+
+def test_spec_active_window_and_payload():
+    spec = FaultSpec(seed=9, start_round=2, end_round=5, outage_prob=0.3)
+    assert [spec.active(t) for t in range(6)] == \
+        [False, False, True, True, True, False]
+    assert FaultSpec.from_payload(spec.to_payload()) == spec
+
+
+def test_runconfig_faults_field():
+    RunConfig(faults="mixed_stress", **FAST)       # registered name: valid
+    RunConfig(faults=None, **FAST)                 # fault-free: valid
+    with pytest.raises(ValueError, match="unknown fault schedule"):
+        RunConfig(faults="solar_flare", **FAST)
+
+
+# ---------------------------------------------------------------------------
+# Injector: pure function of (spec.seed, round, fleet size)
+# ---------------------------------------------------------------------------
+def test_injector_round_keyed_determinism():
+    spec = FaultSpec(seed=7, straggler_prob=0.5, outage_prob=0.5,
+                     departure_prob=0.5, poison_prob=0.5)
+    inj = FaultInjector(spec)
+    a, b = inj.draw(3, 8), inj.draw(3, 8)
+    for f in ("slowdown", "outage", "departed", "poisoned"):
+        np.testing.assert_array_equal(getattr(a, f), getattr(b, f), err_msg=f)
+    # different rounds draw from different streams
+    c = inj.draw(4, 8)
+    assert any(not np.array_equal(getattr(a, f), getattr(c, f))
+               for f in ("slowdown", "outage", "departed", "poisoned"))
+    # a departed vehicle's update never arrives: poisoning it is moot
+    assert not (a.departed & a.poisoned).any()
+
+
+def test_injector_benign_cases():
+    inj = FaultInjector(FaultSpec(seed=1, start_round=5, departure_prob=1.0))
+    assert inj.draw(0, 6).any is False             # inactive round
+    assert inj.draw(5, 0).slowdown.shape == (0,)   # empty fleet
+    assert inj.draw(5, 6).departed.all()           # active round
+
+
+def test_stale_buffer_ages_and_drop():
+    buf = StaleBuffer()
+    for t in (0, 1, 3):
+        buf.push(StaleEntry(params=None, size=10, emd=0.5, trained_round=t,
+                            vid=t))
+    assert len(buf) == 3
+    merge, ages = buf.pop_mergeable(3, max_staleness=2)
+    # trained at 0 is age 3 > 2: too stale, silently dropped
+    assert [e.trained_round for e in merge] == [1, 3] and ages == [2, 0]
+    assert len(buf) == 0                           # drained either way
+
+
+# ---------------------------------------------------------------------------
+# Guarded aggregation kernel
+# ---------------------------------------------------------------------------
+def test_guarded_kernel_neutral_on_finite():
+    rng = np.random.default_rng(0)
+    stacked = {"w": jnp.asarray(rng.normal(size=(3, 4)), jnp.float32),
+               "b": jnp.asarray(rng.normal(size=(3, 2)), jnp.float32)}
+    aug = {"w": jnp.zeros(4), "b": jnp.ones(2)}
+    fb = {"w": jnp.full(4, 9.0), "b": jnp.full(2, 9.0)}
+    w = jnp.asarray([0.2, 0.3, 0.5], jnp.float32)
+    plain = aggregate_stacked(stacked, w, aug, jnp.float32(0.25))
+    guarded, finite = aggregate_stacked_guarded(stacked, w, aug,
+                                                jnp.float32(0.25), fb)
+    assert finite.all()
+    for k in stacked:
+        np.testing.assert_array_equal(np.asarray(plain[k]),
+                                      np.asarray(guarded[k]), err_msg=k)
+
+
+def test_guarded_kernel_rejects_and_renormalizes():
+    stacked = {"w": jnp.asarray([[1.0, 2.0], [3.0, 4.0], [np.nan, 5.0]],
+                                jnp.float32)}
+    aug = {"w": jnp.zeros(2, jnp.float32)}
+    fb = {"w": jnp.full(2, 7.0, jnp.float32)}
+    w = jnp.asarray([0.25, 0.25, 0.5], jnp.float32)
+    out, finite = aggregate_stacked_guarded(stacked, w, aug,
+                                            jnp.float32(0.0), fb)
+    np.testing.assert_array_equal(np.asarray(finite), [True, True, False])
+    # survivors absorb the poisoned client's mass: (0.25*r0+0.25*r1) * (1/0.5)
+    np.testing.assert_allclose(np.asarray(out["w"]), [2.0, 3.0], rtol=1e-6)
+    # all-poisoned: the federated mass redirects to the fallback
+    poisoned = {"w": jnp.full((3, 2), jnp.nan, jnp.float32)}
+    out2, finite2 = aggregate_stacked_guarded(poisoned, w, aug,
+                                              jnp.float32(0.0), fb)
+    assert not np.asarray(finite2).any()
+    np.testing.assert_allclose(np.asarray(out2["w"]), [7.0, 7.0], rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# No-injection equivalence: the fault plumbing must cost NOTHING when benign
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("vectorized", [True, False])
+def test_no_injection_bitwise_equivalence(vectorized):
+    """faults=None and an all-zero-probability FaultSpec must produce
+    bitwise-identical RoundLogs: clean rounds keep dispatching the seed's
+    unguarded kernel (the guarded one is a different fused XLA program)."""
+    run = RunConfig(strategy="genfv", scenario="rush_hour", seed=0,
+                    vectorized=vectorized, **FAST)
+    plain = GenFVRunner(run, fl_cfg=FAST_CFG).train()
+    benign = GenFVRunner(run, fl_cfg=FAST_CFG,
+                         faults=FaultSpec(seed=1)).train()
+    _assert_same(plain, benign)
+
+
+def test_fault_run_deterministic():
+    """Determinism guard (round-keyed injection): two fresh runners under the
+    same registered schedule produce identical RoundLog curves."""
+    run = RunConfig(strategy="genfv", scenario="rush_hour", seed=0,
+                    faults="mixed_stress", **FAST)
+    a = GenFVRunner(run, fl_cfg=FAST_CFG).train()
+    b = GenFVRunner(run, fl_cfg=FAST_CFG).train()
+    _assert_same(a, b)
+
+
+# ---------------------------------------------------------------------------
+# Degradation + recovery behavior
+# ---------------------------------------------------------------------------
+def test_straggler_recovery_ledger():
+    """Everyone straggles past the deadline: updates are buffered, then
+    merged next round with staleness discount — and none are lost except the
+    final round's (nothing left to merge them into)."""
+    spec = FaultSpec(seed=3, straggler_prob=1.0, straggler_slowdown=50.0,
+                     deadline_slack=0.05)
+    run = RunConfig(strategy="genfv", scenario="rush_hour", seed=0,
+                    rounds=4, train_size=300, test_size=32,
+                    width_mult=0.0625)
+    res = GenFVRunner(run, fl_cfg=FAST_CFG, faults=spec).train()
+    late = res.curve("late")
+    merged = res.curve("stale_merged")
+    assert late.sum() > 0
+    # conservation: every buffered update is merged exactly one round later
+    np.testing.assert_array_equal(merged[1:], late[:-1])
+    assert merged[0] == 0
+    # a late round holds the RSU open until the deadline (> planned t_bar)
+    for log in res.logs:
+        if log.late:
+            assert log.t_round == pytest.approx(
+                log.t_bar * (1 + spec.deadline_slack))
+            assert log.t_round > log.t_bar
+        assert np.isfinite(log.loss) and 0.0 <= log.accuracy <= 1.0
+
+
+@pytest.mark.parametrize("vectorized", [True, False])
+def test_all_poisoned_round_falls_back(vectorized):
+    """poison_prob=1: the guard rejects every update, the global degrades to
+    'no federated progress' (never NaN/zero-collapse), and the ledger counts
+    every participant as rejected."""
+    spec = FaultSpec(seed=4, poison_prob=1.0)
+    run = RunConfig(strategy="genfv", scenario="rush_hour", seed=0,
+                    vectorized=vectorized, **FAST)
+    r = GenFVRunner(run, fl_cfg=FAST_CFG, faults=spec)
+    res = r.train()
+    for log in res.logs:
+        assert log.rejected == log.selected - log.late
+        assert 0.0 <= log.accuracy <= 1.0
+    assert res.curve("rejected").sum() > 0
+    assert tree_finite(r.server.params)            # model never corrupted
+
+
+def test_poison_minority_vec_seq_parity():
+    """Partial poisoning: the in-kernel guard (vectorized) and the host-side
+    guard (sequential reference) must agree on the full ledger AND the
+    model trajectory — the renormalized survivor weights are identical."""
+    run_v = RunConfig(strategy="genfv", scenario="rush_hour", seed=0,
+                      faults="poison_minority", vectorized=True, **FAST)
+    run_s = dataclasses.replace(run_v, vectorized=False)
+    a = GenFVRunner(run_v, fl_cfg=FAST_CFG).train()
+    b = GenFVRunner(run_s, fl_cfg=FAST_CFG).train()
+    assert a.curve("rejected").sum() > 0           # the schedule actually bit
+    _assert_same(a, b, keys=("selected", "dropped", "late", "rejected",
+                             "stale_merged", "accuracy"))
+
+
+# ---------------------------------------------------------------------------
+# Golden resume: checkpoint mid-run, reload into a fresh runner, finish —
+# bitwise-equal to the uninterrupted run, on both planner backends, with
+# and without an active fault schedule (the stale buffer crosses the
+# checkpoint boundary under mixed_stress).
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("planner", ["jax", "numpy"])
+@pytest.mark.parametrize("faults", [None, "mixed_stress"])
+def test_golden_resume(planner, faults, tmp_path):
+    run = RunConfig(strategy="genfv", scenario="rush_hour", seed=0,
+                    planner=planner, faults=faults, **FAST)
+    full = GenFVRunner(run, fl_cfg=FAST_CFG).train()
+
+    path = str(tmp_path / "runner.npz")
+    interrupted = GenFVRunner(run, fl_cfg=FAST_CFG)
+    for t in range(2):
+        interrupted.run_round(t)
+    interrupted.save_checkpoint(path)
+
+    resumed = GenFVRunner(run, fl_cfg=FAST_CFG)
+    assert resumed.load_checkpoint(path) == 2
+    res = resumed.train()
+    assert len(res.logs) == FAST["rounds"]
+    for full_log, res_log in zip(full.logs, res.logs):
+        assert full_log == res_log                 # every field, bitwise
+
+
+def test_checkpoint_atomic_on_partial_write(tmp_path, monkeypatch):
+    """A crash mid-save (simulated: np.savez dies after writing partial
+    bytes) must leave the previous checkpoint intact and no temp litter —
+    the tmp-file + os.replace protocol's whole point."""
+    import repro.checkpoint.io as ckpt_io
+    from repro.checkpoint import read_manifest, restore_tree, save_tree
+    path = str(tmp_path / "ckpt.npz")
+    final = save_tree(path, {"a": np.arange(4.0)}, metadata={"step": 1})
+
+    def torn_savez(f, **arrays):
+        f.write(b"PK\x03\x04 half a zip")
+        raise OSError("disk full")
+
+    monkeypatch.setattr(ckpt_io.np, "savez", torn_savez)
+    with pytest.raises(OSError, match="disk full"):
+        save_tree(path, {"a": np.zeros(4)}, metadata={"step": 2})
+    monkeypatch.undo()
+    # the old checkpoint is still the one on disk, fully readable
+    assert read_manifest(final)["metadata"] == {"step": 1}
+    np.testing.assert_array_equal(restore_tree(final)["a"], np.arange(4.0))
+    assert [p.name for p in tmp_path.iterdir()] == ["ckpt.npz"]
+
+
+def test_checkpoint_rejects_foreign_runconfig(tmp_path):
+    path = str(tmp_path / "runner.npz")
+    r = GenFVRunner(RunConfig(strategy="genfv", scenario="rush_hour",
+                              seed=0, **FAST), fl_cfg=FAST_CFG)
+    r.run_round(0)
+    r.save_checkpoint(path)
+    other = GenFVRunner(RunConfig(strategy="fedavg", scenario="rush_hour",
+                                  seed=0, **FAST), fl_cfg=FAST_CFG)
+    with pytest.raises(ValueError, match="different RunConfig"):
+        other.load_checkpoint(path)
+
+
+# ---------------------------------------------------------------------------
+# Resumable sweep: kill mid-grid, resume, finish — metrics bitwise.
+# ---------------------------------------------------------------------------
+def _sweep_spec():
+    return ExperimentSpec(
+        name="faults-resume",
+        strategies=("genfv",),
+        base=RunConfig(**FAST),
+        overrides=({}, {"faults": "mixed_stress"}))
+
+
+def test_sweep_resume_mid_grid(tmp_path):
+    spec = _sweep_spec()
+    full = Sweep(spec, fl_cfg=FAST_CFG).run()
+    d = str(tmp_path / "ckpt")
+    part = Sweep(spec, fl_cfg=FAST_CFG).run(checkpoint_dir=d, stop_after=2)
+    assert int(part.rounds.max()) == 2             # the simulated kill
+    res = Sweep(spec, fl_cfg=FAST_CFG).run(checkpoint_dir=d)
+    np.testing.assert_array_equal(res.rounds, full.rounds)
+    for k in full.metrics:
+        np.testing.assert_array_equal(res.metrics[k], full.metrics[k],
+                                      err_msg=k)
+
+
+def test_sweep_resume_guards(tmp_path):
+    spec = _sweep_spec()
+    d = str(tmp_path / "ckpt")
+    Sweep(spec, fl_cfg=FAST_CFG).run(checkpoint_dir=d, stop_after=1)
+    # a different spec must refuse the directory
+    other = ExperimentSpec(name="other", strategies=("fedavg",),
+                           base=RunConfig(**FAST))
+    with pytest.raises(ValueError, match="different ExperimentSpec"):
+        Sweep(other, fl_cfg=FAST_CFG).run(checkpoint_dir=d)
+    # torn checkpoint: manifest claims more rounds than the cells hold
+    man_path = os.path.join(d, "manifest.json")
+    man = json.load(open(man_path))
+    man["completed_rounds"] += 1
+    json.dump(man, open(man_path, "w"))
+    with pytest.raises(ValueError, match="torn checkpoint"):
+        Sweep(spec, fl_cfg=FAST_CFG).run(checkpoint_dir=d)
+
+
+# ---------------------------------------------------------------------------
+# Bench smoke (tier-1 wiring, mirroring bench_sweep --quick)
+# ---------------------------------------------------------------------------
+def test_bench_faults_quick_smoke(tmp_path):
+    out = tmp_path / "BENCH_faults.json"
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO_ROOT, "src") + os.pathsep + \
+        env.get("PYTHONPATH", "")
+    r = subprocess.run(
+        [sys.executable, "-m", "benchmarks.bench_faults", "--quick",
+         "--out", str(out)],
+        cwd=REPO_ROOT, env=env, capture_output=True, text=True, timeout=540)
+    assert r.returncode == 0, r.stderr[-2000:]
+    data = json.loads(out.read_text())
+    assert data["quick"] is True
+    assert data["deterministic"] is True
+    names = [row["faults"] for row in data["pairs"]]
+    assert "platoon_mass_dropout" in names and "rush_hour_deep_fade" in names
+    for row in data["pairs"]:
+        assert 0.0 <= row["acc_faulted"] <= 1.0
+        assert row["delay_inflation"] >= 1.0 - 1e-9

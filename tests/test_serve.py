@@ -61,6 +61,29 @@ def test_slot_reuse(model):
     assert done[1].out == _reference(cfg, params, p2, 3)
 
 
+def test_merge_lane_row_surgery_and_scalar_leaves():
+    """_merge_lane's contract per leaf kind: batch-dim leaves get row
+    surgery (only the target row changes), scalar leaves take the lane's
+    value (pins the old `dst.ndim == 0 or ... and dst.ndim == 0`
+    precedence confusion), and batch-free same-shape leaves are replaced."""
+    from repro.serve.engine import _merge_lane
+    cache = {"kv": jnp.arange(24, dtype=jnp.float32).reshape(2, 3, 4),
+             "idx": jnp.array([5, 7]),             # per-row cursor
+             "step": jnp.array(3),                 # scalar leaf
+             "rope": jnp.arange(6.0).reshape(3, 2)}  # batch-free, same shape
+    lane = {"kv": jnp.full((1, 3, 4), -1.0, jnp.float32),
+            "idx": jnp.array([9]),
+            "step": jnp.array(11),
+            "rope": jnp.full((3, 2), 2.5)}
+    out = _merge_lane(cache, lane, row=1)
+    np.testing.assert_array_equal(np.asarray(out["kv"][0]),
+                                  np.arange(12, dtype=np.float32).reshape(3, 4))
+    assert (np.asarray(out["kv"][1]) == -1.0).all()
+    assert np.asarray(out["idx"]).tolist() == [5, 9]
+    assert int(out["step"]) == 11
+    assert (np.asarray(out["rope"]) == 2.5).all()
+
+
 def test_per_row_cache_cursor(model):
     """The per-row idx cursor: rows at different positions never clobber
     each other (the scalar-cursor bug this engine exposed)."""
