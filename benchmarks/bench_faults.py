@@ -20,13 +20,11 @@ pairs at 3 rounds on a tiny train set (tier-1: tests/test_faults.py).
 from __future__ import annotations
 
 import argparse
-import json
 import os
-import time
 
 import numpy as np
 
-from benchmarks.common import emit
+from benchmarks.common import emit, record, stopwatch, write_json
 from repro.configs.base import GenFVConfig
 from repro.fl.rounds import GenFVRunner, RunConfig
 
@@ -63,7 +61,7 @@ def run(quick: bool = True, out: str | None = None) -> dict:
 
     rows = []
     deterministic = True
-    t0 = time.perf_counter()
+    sw = stopwatch()
     for scenario, fault in pairs:
         base_run = RunConfig(strategy="genfv", scenario=scenario, seed=0,
                              **sizes)
@@ -99,7 +97,7 @@ def run(quick: bool = True, out: str | None = None) -> dict:
         }
         rows.append(row)
         emit(f"faults/{scenario}+{fault}",
-             (time.perf_counter() - t0) * 1e6 / max(len(rows), 1),
+             sw.elapsed_s * 1e6 / max(len(rows), 1),
              f"acc={row['acc_faulted']:.3f} "
              f"degr={row['acc_degradation']:+.3f} "
              f"delay_x={row['delay_inflation']:.2f} "
@@ -107,17 +105,11 @@ def run(quick: bool = True, out: str | None = None) -> dict:
              f"rej={row['rejected']} merged={row['stale_merged']} "
              f"det={same}")
 
-    doc = {
-        "bench": "fault-tolerant GenFV rounds (fl/faults.py schedules)",
-        "quick": quick,
-        "rounds": sizes["rounds"],
-        "pairs": rows,
-        "deterministic": deterministic,
-        "wall_s": time.perf_counter() - t0,
-    }
-    path = out or DEFAULT_OUT
-    with open(path, "w") as f:
-        json.dump(doc, f, indent=1)
+    doc = record("fault-tolerant GenFV rounds (fl/faults.py schedules)",
+                 quick=quick, config={"rounds": sizes["rounds"]},
+                 results=rows, rounds=sizes["rounds"], pairs=rows,
+                 deterministic=deterministic, wall_s=sw.elapsed_s)
+    write_json(doc, out or DEFAULT_OUT, indent=1)
     return doc
 
 

@@ -19,14 +19,12 @@ Writes BENCH_planner.json (default: repo root) and prints the house
 from __future__ import annotations
 
 import argparse
-import json
 import os
-import time
 from typing import Dict, List
 
 import numpy as np
 
-from benchmarks.common import emit
+from benchmarks.common import emit, record, stopwatch, write_json
 from repro.configs.base import GenFVConfig
 from repro.core import mobility
 from repro.core.two_scale import plan_round, plan_rounds_batched
@@ -48,9 +46,9 @@ def _fleet(seed: int, cfg: GenFVConfig):
 def _median_ms(fn, reps: int) -> float:
     ts = []
     for _ in range(reps):
-        t0 = time.perf_counter()
-        fn()
-        ts.append(time.perf_counter() - t0)
+        with stopwatch() as sw:
+            fn()
+        ts.append(sw.elapsed_s)
     return float(np.median(ts)) * 1e3
 
 
@@ -101,15 +99,14 @@ def run_bench(quick: bool = False) -> Dict:
         reps, fleet_counts = 3, (4,)
     else:
         reps, fleet_counts = 15, (8, 16, 32)
-    out: Dict = {
-        "bench": "two-scale planner: jitted single-plan + vmapped batched",
-        "quick": quick,
-        "config": {"n_vehicles": N_VEHICLES, "model_bits": MODEL_BITS,
-                   "batches": BATCHES},
-        "single": bench_single(cfg, reps),
-        "batched": [bench_batched(cfg, f, reps) for f in fleet_counts],
-    }
-    return out
+    single = bench_single(cfg, reps)
+    batched = [bench_batched(cfg, f, reps) for f in fleet_counts]
+    return record("two-scale planner: jitted single-plan + vmapped batched",
+                  quick=quick,
+                  config={"n_vehicles": N_VEHICLES,
+                          "model_bits": MODEL_BITS, "batches": BATCHES},
+                  results={"single": single, "batched": batched},
+                  single=single, batched=batched)
 
 
 def run(quick: bool = True) -> None:
@@ -129,8 +126,7 @@ def main(argv=None) -> int:
         pass                         # (append probe: keep prior results)
     print("name,us_per_call,derived")
     res = run_bench(quick=args.quick)
-    with open(args.out, "w") as f:
-        json.dump(res, f, indent=2)
+    write_json(res, args.out)
     print(f"# wrote {args.out}")
     return 0
 

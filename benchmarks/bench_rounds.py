@@ -27,15 +27,13 @@ Writes BENCH_rounds.json (default: repo root) and prints the house
 from __future__ import annotations
 
 import argparse
-import json
 import os
-import time
 from typing import Dict, List, Sequence
 
 import jax
 import numpy as np
 
-from benchmarks.common import emit
+from benchmarks.common import emit, record, stopwatch, write_json
 from repro.configs.genfv_cifar import cnn_config
 from repro.core.emd import aggregate, data_weights, mean_emd
 from repro.data.synthetic import make_image_dataset
@@ -53,9 +51,9 @@ def _time_rounds(fn, reps: int) -> float:
     fn(np.random.default_rng(0))                      # warmup / compile
     best = float("inf")
     for r in range(1, reps + 1):
-        t0 = time.perf_counter()
-        fn(np.random.default_rng(r))
-        best = min(best, time.perf_counter() - t0)
+        with stopwatch() as sw:
+            fn(np.random.default_rng(r))
+        best = min(best, sw.elapsed_s)
     return best
 
 
@@ -118,17 +116,13 @@ def run_bench(quick: bool = False) -> Dict:
         faithful_cfg = dict(ks=(16,), width=0.125, subsample=1, h=2, batch=8,
                             reps=3)
 
-    out: Dict = {
-        "bench": "fleet engine rounds/sec (vectorized vs sequential)",
-        "backend": jax.default_backend(),
-        "quick": quick,
-        "config": sweep_cfg,
-        "results": _bench_config(**sweep_cfg),
-    }
+    results = _bench_config(**sweep_cfg)
+    legacy: Dict = {"backend": jax.default_backend()}
     if faithful_cfg is not None:
-        out["faithful_config"] = faithful_cfg
-        out["faithful"] = _bench_config(**faithful_cfg)
-    return out
+        legacy["faithful_config"] = faithful_cfg
+        legacy["faithful"] = _bench_config(**faithful_cfg)
+    return record("fleet engine rounds/sec (vectorized vs sequential)",
+                  quick=quick, config=sweep_cfg, results=results, **legacy)
 
 
 def run(quick: bool = True) -> None:
@@ -148,8 +142,7 @@ def main(argv=None) -> int:
         f.write("{}")                # not after minutes of benching
     print("name,us_per_call,derived")
     res = run_bench(quick=args.quick)
-    with open(args.out, "w") as f:
-        json.dump(res, f, indent=2)
+    write_json(res, args.out)
     print(f"# wrote {args.out}")
     return 0
 

@@ -15,16 +15,15 @@ Writes BENCH_sweep.json (default: repo root) and prints the house
 from __future__ import annotations
 
 import argparse
-import json
 import os
-import time
 
 import numpy as np
 
-from benchmarks.common import emit
+from benchmarks.common import emit, record, stopwatch, write_json
 from repro.configs.base import GenFVConfig
 from repro.exp import ExperimentSpec, Sweep
 from repro.fl.rounds import GenFVRunner, RunConfig
+from repro.obs import Obs
 
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 DEFAULT_OUT = os.path.join(REPO_ROOT, "BENCH_sweep.json")
@@ -60,13 +59,17 @@ def run(quick: bool = True, out: str | None = None) -> dict:
     # warmup: one throwaway sweep compiles every jit bucket both paths use
     Sweep(spec, fl_cfg=cfg).run()
 
-    t0 = time.perf_counter()
-    result = Sweep(spec, fl_cfg=cfg).run()
-    t_sweep = time.perf_counter() - t0
+    # the measured sweep carries a tracer: per-phase span distributions land
+    # in the envelope's "metrics" block, and attaching it must not perturb
+    # the run (the bitwise-parity check below still holds)
+    obs = Obs(meta={"bench": "sweep", "spec": spec.name})
+    with stopwatch() as sw:
+        result = Sweep(spec, fl_cfg=cfg, obs=obs).run()
+    t_sweep = sw.elapsed_s
 
-    t0 = time.perf_counter()
-    singles = [GenFVRunner(c.run, fl_cfg=cfg).train() for c in cells]
-    t_single = time.perf_counter() - t0
+    with stopwatch() as sw:
+        singles = [GenFVRunner(c.run, fl_cfg=cfg).train() for c in cells]
+    t_single = sw.elapsed_s
 
     mismatches = 0
     for c, single in zip(cells, singles):
@@ -84,9 +87,7 @@ def run(quick: bool = True, out: str | None = None) -> dict:
          f"largest_batch={result.meta['planner_largest_batch']} "
          f"dataset_builds={result.meta['dataset_builds']}")
 
-    doc = {
-        "bench": "repro.exp sweep vs per-cell runners",
-        "quick": quick,
+    results = {
         "n_cells": spec.n_cells,
         "rounds": cells[0].run.rounds,
         "t_sweep_s": t_sweep,
@@ -95,9 +96,9 @@ def run(quick: bool = True, out: str | None = None) -> dict:
         "bitwise_parity": mismatches == 0,
         "meta": result.meta,
     }
-    path = out or DEFAULT_OUT
-    with open(path, "w") as f:
-        json.dump(doc, f, indent=1)
+    doc = record("repro.exp sweep vs per-cell runners", quick=quick,
+                 results=results, obs=obs, **results)
+    write_json(doc, out or DEFAULT_OUT, indent=1)
     return doc
 
 

@@ -23,14 +23,12 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
-import json
 import os
-import time
 from typing import Dict, List
 
 import numpy as np
 
-from benchmarks.common import emit
+from benchmarks.common import emit, record, stopwatch, write_json
 from repro.configs.base import GenFVConfig
 from repro.core.mobility import coverage_half_length
 from repro.sim import SCENARIOS, VehicularWorld, get_scenario
@@ -59,11 +57,11 @@ def bench_throughput(n_vehicles: int, steps: int, dt: float = 3.0) -> Dict:
     for _ in range(2):                  # warmup (allocator, caches)
         world.step(rng, dt)
     pops = []
-    t0 = time.perf_counter()
-    for _ in range(steps):
-        world.step(rng, dt)
-        pops.append(world.n)
-    elapsed = time.perf_counter() - t0
+    with stopwatch() as sw:
+        for _ in range(steps):
+            world.step(rng, dt)
+            pops.append(world.n)
+    elapsed = sw.elapsed_s
 
     mean_pop = float(np.mean(pops))
     row = {
@@ -93,9 +91,9 @@ def bench_scenarios(scenarios: List[str], rounds: int, train_size: int,
                         width_mult=width_mult, strategy=strategy, seed=0,
                         scenario=name)
         fl_cfg = GenFVConfig(batch_size=8, local_steps=2, num_vehicles=10)
-        t0 = time.perf_counter()
-        res = GenFVRunner(run, fl_cfg=fl_cfg).train()
-        elapsed = time.perf_counter() - t0
+        with stopwatch() as sw:
+            res = GenFVRunner(run, fl_cfg=fl_cfg).train()
+        elapsed = sw.elapsed_s
         row = {
             "scenario": name,
             "rounds": rounds,
@@ -121,14 +119,14 @@ def run_bench(quick: bool = False) -> Dict:
         sizes, steps = (10_000, 30_000, 100_000), 100
         sweep = dict(scenarios=sorted(SCENARIOS), rounds=6, train_size=1200,
                      width_mult=0.125)
-    out: Dict = {
-        "bench": "repro.sim world-step throughput + scenario sweep",
-        "quick": quick,
-        "throughput": [bench_throughput(n, steps) for n in sizes],
-        "sweep_config": sweep,
-        "scenarios": bench_scenarios(**sweep),
-    }
-    return out
+    throughput = [bench_throughput(n, steps) for n in sizes]
+    scenarios = bench_scenarios(**sweep)
+    return record("repro.sim world-step throughput + scenario sweep",
+                  quick=quick, config={"sizes": list(sizes), "steps": steps,
+                                       "sweep": sweep},
+                  results={"throughput": throughput, "scenarios": scenarios},
+                  throughput=throughput, sweep_config=sweep,
+                  scenarios=scenarios)
 
 
 def run(quick: bool = True) -> None:
@@ -148,8 +146,7 @@ def main(argv=None) -> int:
         pass                         # (append probe: keep prior results)
     print("name,us_per_call,derived")
     res = run_bench(quick=args.quick)
-    with open(args.out, "w") as f:
-        json.dump(res, f, indent=2)
+    write_json(res, args.out)
     print(f"# wrote {args.out}")
     return 0
 

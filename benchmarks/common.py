@@ -1,8 +1,27 @@
-"""Shared benchmark helpers: CSV emission + timing."""
+"""Shared benchmark helpers: the house CSV line, the unified
+``repro.obs/bench/v1`` JSON envelope, and the obs stopwatch.
+
+Every BENCH_*.json is assembled by `record()` so downstream readers
+(`make_experiments_md.py`, tests/test_bench_schema.py) see one shape:
+``schema / bench / quick / host / config / results`` — with each module's
+historical top-level keys kept as aliases, so pre-existing consumers of
+e.g. ``doc["throughput"]`` keep working.
+
+Timing uses `repro.obs.stopwatch` (an explicit-clock context manager),
+which replaced the old `timer()` here — that helper returned a raw
+``time.perf_counter()`` float despite its name suggesting a context, and
+had no call sites left.
+"""
 from __future__ import annotations
 
+import json
 import os
-import time
+from typing import Any, Dict, Optional
+
+from repro.obs import BENCH_SCHEMA, Stopwatch, host_meta, stopwatch
+
+__all__ = ["ART", "BENCH_SCHEMA", "Stopwatch", "emit", "ensure_art",
+           "host_meta", "record", "stopwatch", "write_json"]
 
 ART = os.path.join(os.path.dirname(__file__), "artifacts")
 
@@ -11,10 +30,37 @@ def emit(name: str, us_per_call: float, derived: str = "") -> None:
     print(f"{name},{us_per_call:.2f},{derived}")
 
 
-def timer():
-    return time.perf_counter()
-
-
 def ensure_art():
     os.makedirs(ART, exist_ok=True)
     return ART
+
+
+def record(bench: str, *, quick: bool = False,
+           config: Optional[Dict[str, Any]] = None,
+           results: Any = None, obs=None, **legacy) -> Dict[str, Any]:
+    """Build the unified benchmark envelope.
+
+    `legacy` keys are merged at top level (aliases for each module's
+    historical schema); an enabled `obs` contributes its metrics snapshot
+    under ``"metrics"``.
+    """
+    doc: Dict[str, Any] = {
+        "schema": BENCH_SCHEMA,
+        "bench": bench,
+        "quick": bool(quick),
+        "host": host_meta(),
+        "config": dict(config) if config else {},
+        "results": results if results is not None else {},
+    }
+    if obs is not None and getattr(obs, "enabled", False):
+        doc["metrics"] = obs.metrics.payload()
+    for k, v in legacy.items():
+        doc.setdefault(k, v)
+    return doc
+
+
+def write_json(doc: Dict[str, Any], path: str, indent: int = 2) -> str:
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=indent)
+        f.write("\n")
+    return path

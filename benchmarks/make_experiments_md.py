@@ -37,6 +37,11 @@ AUTOGEN markers are rewritten by `benchmarks/make_experiments_md.py`.
 <!-- AUTOGEN:theorem1 -->
 <!-- /AUTOGEN:theorem1 -->
 
+## Observability — per-phase timings
+
+<!-- AUTOGEN:obs-timings -->
+<!-- /AUTOGEN:obs-timings -->
+
 ## Roofline (single-pod)
 
 <!-- AUTOGEN:roofline-sp -->
@@ -163,6 +168,46 @@ def sweep_tables(directory: str = SWEEP_ART) -> str:
     return "\n\n".join(blocks)
 
 
+def obs_timing_tables(directory: str = SWEEP_ART) -> str:
+    """Per-phase span timings from every `repro.obs/metrics/v1` artifact
+    (*.metrics.json): one row per (span, compile/execute stage) with count,
+    total and mean/min/max wall time. The compile rows separate
+    trace-and-compile cost from steady-state execution."""
+    from repro.obs import list_metrics_artifacts, load_metrics_artifact
+    paths = list_metrics_artifacts(directory)
+    if not paths:
+        return ("_no metrics artifacts yet — run with an `Obs` tracer and "
+                "`obs.save_metrics(name)`_")
+
+    def ms(x):
+        return f"{x * 1e3:.1f}"
+
+    blocks = []
+    for path in paths:
+        doc = load_metrics_artifact(path)
+        spans = [d for d in doc.get("dists", [])
+                 if d["name"].startswith("span/")]
+        if not spans:
+            continue
+        lines = [f"**{doc['name']}** (`{os.path.basename(path)}`, "
+                 f"{doc.get('events', '?')} events, backend "
+                 f"{doc.get('host', {}).get('backend', '?')})",
+                 "",
+                 "| phase | stage | calls | total | mean | min | max |",
+                 "|---|---|---|---|---|---|---|"]
+        for d in spans:
+            stage = d["tags"].get("stage", "")
+            mean = d["sum"] / max(d["n"], 1)
+            lines.append(
+                f"| {d['name'][len('span/'):]} | {stage} | {d['n']} "
+                f"| {ms(d['sum'])}ms | {ms(mean)}ms "
+                f"| {ms(d['min'])}ms | {ms(d['max'])}ms |")
+        blocks.append("\n".join(lines))
+    if not blocks:
+        return "_metrics artifacts exist but carry no span distributions_"
+    return "\n\n".join(blocks)
+
+
 def theorem1_tables(directory: str = SWEEP_ART) -> str:
     """Per-scenario bound-tightness tables from *.theorem1.json, formatted
     by the same helper `Theorem1Report.to_markdown` uses."""
@@ -195,6 +240,7 @@ def main():
     md = open(MD).read() if os.path.exists(MD) else SKELETON
     md = inject(md, "sweeps", sweep_tables())
     md = inject(md, "theorem1", theorem1_tables())
+    md = inject(md, "obs-timings", obs_timing_tables())
     md = inject(md, "roofline-sp", roofline_table(recs, "16x16", opt))
     md = inject(md, "roofline-mp", roofline_table(recs, "2x16x16"))
     md = inject(md, "dryrun", dryrun_summary(recs))

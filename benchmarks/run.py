@@ -7,9 +7,9 @@ from __future__ import annotations
 
 import argparse
 import sys
-import time
 import traceback
 
+from benchmarks.common import stopwatch
 from benchmarks import (bench_faults, bench_planner, bench_rounds,
                         bench_sweep, bench_world, fig5_emd, fig6_selection,
                         fig7_power, fig8_subproblems, fig9_generation,
@@ -53,14 +53,14 @@ def main() -> int:
     print("name,us_per_call,derived")
     failures = 0
     for k in keys:
-        t0 = time.perf_counter()
-        try:
-            MODULES[k]()
-        except Exception as e:
-            failures += 1
-            print(f"{k}/FAILED,0.00,{type(e).__name__}: {e}")
-            traceback.print_exc(file=sys.stderr)
-        print(f"{k}/module_total,{(time.perf_counter() - t0) * 1e6:.0f},")
+        with stopwatch() as sw:
+            try:
+                MODULES[k]()
+            except Exception as e:
+                failures += 1
+                print(f"{k}/FAILED,0.00,{type(e).__name__}: {e}")
+                traceback.print_exc(file=sys.stderr)
+        print(f"{k}/module_total,{sw.elapsed_s * 1e6:.0f},")
     return 1 if failures else 0
 
 

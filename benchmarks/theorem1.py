@@ -13,7 +13,9 @@ bound (i) worsens with the divergence bounds lambda_n = EMD_n * g_n and
 average.
 
 Artifacts (committed): artifacts/theorem1.sweep.json +
-artifacts/theorem1.theorem1.json.
+artifacts/theorem1.theorem1.json + artifacts/theorem1.metrics.json (the
+obs tracer's per-phase timings and planner/fault counters for the same
+8-cell sweep; EXPERIMENTS.md renders its span table).
 """
 from __future__ import annotations
 
@@ -28,6 +30,7 @@ from repro.core.emd import kappas
 from repro.exp import ExperimentSpec, Sweep, optimal_kappa2, \
     theorem1_comparison
 from repro.fl.rounds import RunConfig
+from repro.obs import Obs
 
 SCENARIOS = ("highway_free_flow", "rush_hour", "urban_stop_go",
              "sparse_rural")
@@ -62,10 +65,15 @@ def run(rounds: int = 8, scenarios=SCENARIOS) -> None:
                        width_mult=0.125, model_bits=11.2e6 * 32),
     )
     fl_cfg = GenFVConfig(batch_size=16, local_steps=4, num_vehicles=10)
+    # tracing is bitwise-neutral (tests/test_obs.py), so the traced sweep
+    # IS the result sweep — no second untraced run needed
+    obs = Obs(meta={"bench": "theorem1", "spec": spec.name,
+                    "cells": spec.n_cells, "rounds": rounds})
     t0 = time.perf_counter()
-    result = Sweep(spec, fl_cfg=fl_cfg).run()
+    result = Sweep(spec, fl_cfg=fl_cfg, obs=obs).run()
     dt = (time.perf_counter() - t0) * 1e6 / spec.n_cells
     result.save()
+    obs.save_metrics(spec.name)
 
     report = theorem1_comparison(result)
     report.save("theorem1")

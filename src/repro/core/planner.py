@@ -81,6 +81,11 @@ class RoundPlan:
     e_total: np.ndarray               # [K] per-vehicle energy
     t_rsu: float                      # RSU generation + augmentation time
     bcd_iters: int = 0
+    # BCD stopped before its iteration cap. Host-side definition shared by
+    # BOTH backends (`bcd_iters < max_bcd`, conservative when convergence
+    # lands exactly on the final allowed iteration) so neither jitted
+    # program changes shape; surfaced into RoundLog by fl/rounds.py.
+    converged: bool = True
     history: List[float] = field(default_factory=list)   # T_bar per BCD iter
     selection: SelectionResult | None = None
 
@@ -379,15 +384,16 @@ def plan_selected_jax(cfg: GenFVConfig, model_bits: float,
                         _pad(consts.phi_max, kp, cfg.phi_min),
                         jnp.asarray(valid), int(b_prev), int(max_bcd))
         out = [np.asarray(o) for o in out]
-    return _unpack(out, k)
+    return _unpack(out, k, int(max_bcd))
 
 
-def _unpack(out, k: int) -> dict:
+def _unpack(out, k: int, max_bcd: int) -> dict:
     l, phi, b, t_mu, e_mu, t_bar, t_rsu, it, hist = out
     iters = int(it)
     return dict(l=l[:k], phi=phi[:k], b_gen=int(b), t_mu=t_mu[:k],
                 e_mu=e_mu[:k], t_bar=float(t_bar), t_rsu=float(t_rsu),
-                bcd_iters=iters, history=[float(h) for h in hist[:iters]])
+                bcd_iters=iters, converged=iters < max_bcd,
+                history=[float(h) for h in hist[:iters]])
 
 
 def plan_rounds_batched(cfg: GenFVConfig, fleets: Sequence[Sequence[Vehicle]],
@@ -452,12 +458,12 @@ def plan_rounds_batched(cfg: GenFVConfig, fleets: Sequence[Sequence[Vehicle]],
                          int(max_bcd))
         out = [np.asarray(o) for o in out]
     for row, f in enumerate(live):
-        r = _unpack([o[row] for o in out], len(idxs[f]))
+        r = _unpack([o[row] for o in out], len(idxs[f]), int(max_bcd))
         s = consts[f]
         plans[f] = RoundPlan(
             alpha=alphas[f], selected=idxs[f], l=r["l"], phi=r["phi"],
             b_gen=r["b_gen"], t_cp=s.t_cp, t_mu=r["t_mu"],
             t_bar=r["t_bar"], e_total=s.e_cp + r["e_mu"], t_rsu=r["t_rsu"],
-            bcd_iters=r["bcd_iters"], history=r["history"],
-            selection=sels[f])
+            bcd_iters=r["bcd_iters"], converged=r["converged"],
+            history=r["history"], selection=sels[f])
     return plans

@@ -72,7 +72,8 @@ def plan_round(cfg: GenFVConfig, fleet: List[Vehicle], model_bits: float,
                          b_gen=r["b_gen"], t_cp=c.t_cp, t_mu=r["t_mu"],
                          t_bar=r["t_bar"], e_total=c.e_cp + r["e_mu"],
                          t_rsu=r["t_rsu"], bcd_iters=r["bcd_iters"],
-                         history=r["history"], selection=sel)
+                         converged=r["converged"], history=r["history"],
+                         selection=sel)
 
     K = len(idx)
     t_cp, e_cp, b_prime, phi_max = c.t_cp, c.e_cp, c.b_prime, c.phi_max
@@ -117,7 +118,9 @@ def plan_round(cfg: GenFVConfig, fleet: List[Vehicle], model_bits: float,
     t_bar = float(np.max(t_cp + t_mu))
     t_rsu = inference_time(svc, b_gen) + rsu_train_time(
         max(b_gen // cfg.gen_batch, 1))
+    # `it < max_bcd` matches the jax backend's host-side convergence
+    # definition (conservative when the break lands on the final iteration)
     return RoundPlan(alpha=alpha, selected=idx, l=l, phi=phi, b_gen=b_gen,
                      t_cp=t_cp, t_mu=t_mu, t_bar=t_bar,
                      e_total=e_cp + e_mu, t_rsu=t_rsu, bcd_iters=it,
-                     history=history, selection=sel)
+                     converged=it < max_bcd, history=history, selection=sel)

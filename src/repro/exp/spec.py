@@ -18,14 +18,17 @@ import json
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Sequence, Tuple
 
-from repro.fl.rounds import RunConfig
+from repro.fl.rounds import RunConfig, run_payload
 
 SPEC_SCHEMA = "repro.exp/spec/v1"
 
 #: RunConfig fields owned by the grid axes — overriding them per-variant
 #: would make a cell's coordinates ambiguous.
 _AXIS_FIELDS = frozenset({"strategy", "scenario", "alpha", "seed"})
-_RUN_FIELDS = frozenset(f.name for f in dataclasses.fields(RunConfig))
+#: "obs" is execution machinery (attach a tracer via Sweep(obs=...) or the
+#: runner, not through a serialized spec): not a valid override.
+_RUN_FIELDS = frozenset(
+    f.name for f in dataclasses.fields(RunConfig)) - {"obs"}
 
 
 def grid(**axes: Sequence) -> List[Dict[str, Any]]:
@@ -152,7 +155,7 @@ class ExperimentSpec:
                 "alphas": list(self.alphas),
                 "seeds": list(self.seeds),
             },
-            "base": dataclasses.asdict(self.base),
+            "base": run_payload(self.base),
             "overrides": [dict(ov) for ov in self.overrides],
         }
 

@@ -29,7 +29,6 @@ artifact schema of `repro.exp.artifacts`.
 """
 from __future__ import annotations
 
-import dataclasses
 import json
 import os
 from dataclasses import dataclass, field
@@ -44,7 +43,8 @@ from repro.data.synthetic import make_image_dataset
 from repro.exp.artifacts import load_artifact, save_artifact, schema_tag
 from repro.exp.spec import Cell, ExperimentSpec
 from repro.fl.fleet import FleetEngine
-from repro.fl.rounds import CLIENT_LR, GenFVRunner
+from repro.fl.rounds import CLIENT_LR, GenFVRunner, run_payload
+from repro.obs import NULL_OBS, log_line
 
 SWEEP_SCHEMA = schema_tag("sweep")                     # repro.exp/sweep/v1
 
@@ -52,7 +52,9 @@ SWEEP_SCHEMA = schema_tag("sweep")                     # repro.exp/sweep/v1
 METRIC_KEYS = ("selected", "dropped", "t_bar", "b_gen", "kappa2",
                "emd_bar", "loss", "accuracy",
                # fault-tolerance ledger (fl/faults.py; zero on clean runs)
-               "late", "rejected", "stale_merged", "t_round")
+               "late", "rejected", "stale_merged", "t_round",
+               # planner diagnostics (core/planner.py)
+               "bcd_iters", "planner_converged")
 
 
 class _DatasetCache:
@@ -85,16 +87,22 @@ class Sweep:
         (`GenFVConfig(dirichlet_alpha=cell.alpha)`).
     generator_factory: optional `cell -> generator` hook for non-oracle
         AIGC services (examples/diffusion_aigc.py); None uses the oracle.
+    obs: a `repro.obs.Obs` tracer shared by the sweep and every cell's
+        runner (each runner gets a cell-tagged view, so spans land on
+        per-cell Perfetto tracks). None keeps the zero-overhead null path;
+        either way the executed rounds are bitwise-identical
+        (tests/test_obs.py).
     """
 
     def __init__(self, spec: ExperimentSpec,
                  fl_cfg: GenFVConfig | None = None,
                  generator_factory: Optional[Callable[[Cell], Any]] = None,
-                 verbose: bool = False):
+                 verbose: bool = False, obs=None):
         self.spec = spec
         self.fl_cfg = fl_cfg
         self.generator_factory = generator_factory
         self.verbose = verbose
+        self.obs = obs if obs is not None else NULL_OBS
         self._datasets = _DatasetCache()
         self._engines: Dict[tuple, FleetEngine] = {}
 
@@ -115,7 +123,8 @@ class Sweep:
         gen = (self.generator_factory(cell)
                if self.generator_factory is not None else None)
         return GenFVRunner(run, fl_cfg=fl, generator=gen, engine=engine,
-                           dataset_fn=self._datasets)
+                           dataset_fn=self._datasets,
+                           obs=self.obs.tagged(cell=cell.index))
 
     # ------------------------------------------------------------------
     # Sweep checkpointing (ROADMAP direction 5): per-cell runner snapshots
@@ -208,11 +217,13 @@ class Sweep:
             for key in sorted(groups, key=lambda k: groups[k][0]):
                 cfg, model_bits = key
                 idxs = groups[key]
-                batch = plan_rounds_batched(
-                    cfg, [pending[i].fleet for i in idxs], model_bits,
-                    batches=cfg.local_steps,
-                    b_prevs=[runners[i].b_prev for i in idxs],
-                    alpha_overrides=[pending[i].alpha for i in idxs])
+                with self.obs.span("sweep/plan_batched", key=len(idxs),
+                                   round=t, fleets=len(idxs)):
+                    batch = plan_rounds_batched(
+                        cfg, [pending[i].fleet for i in idxs], model_bits,
+                        batches=cfg.local_steps,
+                        b_prevs=[runners[i].b_prev for i in idxs],
+                        alpha_overrides=[pending[i].alpha for i in idxs])
                 dispatches += 1
                 batched_fleets += len(idxs)
                 largest_batch = max(largest_batch, len(idxs))
@@ -224,15 +235,20 @@ class Sweep:
                 logs[i].append(log)
                 if self.verbose:
                     c = cells[i]
-                    print(f"[{c.strategy}/{c.scenario}/a{c.alpha}/s{c.seed}]"
-                          f" round {t:3d} sel={log.selected:2d}"
-                          f" drop={log.dropped} t_bar={log.t_bar:5.2f}s"
-                          f" loss={log.loss:.3f} acc={log.accuracy:.3f}")
+                    log_line(
+                        self.obs, f"sweep/cell_{c.index}",
+                        f"[{c.strategy}/{c.scenario}/a{c.alpha}/s{c.seed}]"
+                        f" round {t:3d} sel={log.selected:2d}"
+                        f" drop={log.dropped} t_bar={log.t_bar:5.2f}s"
+                        f" loss={log.loss:.3f} acc={log.accuracy:.3f}",
+                        force=t == c.run.rounds - 1,
+                        cell=c.index, round=t)
 
             executed += 1
             if checkpoint_dir is not None and \
                     (t + 1) % max(checkpoint_every, 1) == 0:
-                self._save_checkpoint(checkpoint_dir, runners, t + 1)
+                with self.obs.span("sweep/checkpoint", round=t):
+                    self._save_checkpoint(checkpoint_dir, runners, t + 1)
 
         meta = {
             "planner_dispatches": dispatches,
@@ -243,6 +259,16 @@ class Sweep:
             "engines": len(self._engines),
             "local_steps": [int(r.cfg.local_steps) for r in runners],
         }
+        if self.obs.enabled:
+            # the Sweep's sharing ledger, previously visible only in the
+            # result meta: batched-planner amortization + cache efficacy
+            self.obs.gauge("sweep/planner_dispatches", dispatches)
+            self.obs.gauge("sweep/planner_batched_fleets", batched_fleets)
+            self.obs.gauge("sweep/planner_largest_batch", largest_batch)
+            self.obs.gauge("sweep/dataset_builds", self._datasets.builds)
+            self.obs.gauge("sweep/dataset_cache_hits", self._datasets.hits)
+            self.obs.gauge("sweep/engines", len(self._engines))
+            self.obs.gauge("sweep/cells", n)
         return SweepResult.build(self.spec, cells, logs, meta)
 
 
@@ -274,7 +300,7 @@ class SweepResult:
         cell_rows = []
         for i, c in enumerate(cells):
             row = c.coords()
-            row["run"] = dataclasses.asdict(c.run)
+            row["run"] = run_payload(c.run)
             row["local_steps"] = local_steps[i]
             cell_rows.append(row)
         return cls(spec, cell_rows, rounds, metrics, dict(meta))

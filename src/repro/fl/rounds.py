@@ -36,10 +36,11 @@ from repro.fl.client import client_update, local_sgd
 from repro.fl.faults import (FaultInjector, FaultSpec, StaleBuffer,
                              StaleEntry, fault_names, get_fault,
                              realized_times)
-from repro.fl.fleet import FleetEngine
+from repro.fl.fleet import FleetEngine, bucket_size
 from repro.fl.generator import OracleGenerator
 from repro.fl.server import GenFVServer
 from repro.models.cnn import cnn_forward, init_cnn
+from repro.obs import NULL_OBS, Obs, log_line
 from repro.sim import LEGACY, VehicularWorld, WorldState, get_scenario, \
     scenario_names
 
@@ -116,10 +117,26 @@ class RunConfig:
     # fault-free loop (which then executes byte-identically to the seed:
     # tests/test_faults.py pins the no-injection equivalence).
     faults: str | None = None
+    # Observability handle (repro.obs): an `Obs` tracer/metrics registry,
+    # or None for the zero-overhead null path. Excluded from equality,
+    # hashing and serialization (`run_payload`) — two runs differing only
+    # in obs are the same experiment, and attaching a tracer must never
+    # change what the run computes (tests/test_obs.py pins bitwise parity).
+    obs: Obs | None = field(default=None, compare=False, repr=False)
 
     def __post_init__(self):
         validate_run_fields(self.strategy, self.scenario, self.planner,
                             self.dataset, self.faults)
+
+
+def run_payload(run: "RunConfig") -> dict:
+    """JSON-ready dict of the fields that identify the experiment — every
+    RunConfig field except the `obs` handle (execution machinery, not
+    configuration). Checkpoint fingerprints and sweep/spec artifacts all
+    serialize through here so an attached tracer never leaks into (or
+    invalidates) persisted state."""
+    return {f.name: getattr(run, f.name)
+            for f in dataclasses.fields(run) if f.name != "obs"}
 
 
 @dataclass
@@ -138,6 +155,9 @@ class RoundLog:
     rejected: int = 0      # non-finite (poisoned) updates the guard refused
     stale_merged: int = 0  # buffered late updates merged this round
     t_round: float = 0.0   # realized wall-clock (= t_bar without faults)
+    # -- planner diagnostics (core/planner.py; previously dropped) ---------
+    bcd_iters: int = 0         # SUBP2-4 BCD outer iterations this round
+    planner_converged: int = 1  # 0 iff the BCD hit its iteration cap
 
 
 @dataclass
@@ -159,14 +179,19 @@ class PendingRound:
 
 
 class GenFVRunner:
-    #: manifest schema of `save_checkpoint` (bump on layout changes)
-    CKPT_SCHEMA = "repro.fl/runner-ckpt/v1"
+    #: manifest schema of `save_checkpoint` (bump on layout changes; v2
+    #: added the RoundLog planner diagnostics bcd_iters/planner_converged)
+    CKPT_SCHEMA = "repro.fl/runner-ckpt/v2"
 
     def __init__(self, run: RunConfig, fl_cfg: GenFVConfig | None = None,
                  generator=None, engine: FleetEngine | None = None,
                  dataset_fn: Callable | None = None,
-                 faults: FaultSpec | None = None):
+                 faults: FaultSpec | None = None, obs=None):
         self.run = run
+        # explicit obs overrides the RunConfig handle (Sweep injects a
+        # cell-tagged view of its shared tracer); default is the null path
+        self.obs = obs if obs is not None else (
+            run.obs if run.obs is not None else NULL_OBS)
         self.cfg = fl_cfg or GenFVConfig(dirichlet_alpha=run.alpha)
         self.scenario = None if run.scenario == LEGACY \
             else get_scenario(run.scenario)
@@ -275,26 +300,36 @@ class GenFVRunner:
         """Phase 1: materialize the round's fleet and run SUBP1 selection."""
         cfg = self.cfg
         # fleet of the round: vehicles map onto data partitions
-        if self.world is None:
-            # legacy memoryless sampler: a fresh i.i.d. fleet every round,
-            # mapped onto a fresh permutation of the data partitions
-            order = self.rng.permutation(len(self.client_data))
-            hists = [self.hists[i] for i in order]
-            sizes = [self.sizes[i] for i in order]
-            fleet = mobility.sample_fleet(self.rng, cfg, hists, sizes)
-            parts = order                       # parts[j]: fleet[j]'s data
-        else:
-            fleet, parts = self.world.fleet(self.hists, self.sizes)
+        with self.obs.span("round/fleet", round=t):
+            if self.world is None:
+                # legacy memoryless sampler: a fresh i.i.d. fleet every
+                # round, mapped onto a fresh permutation of the partitions
+                order = self.rng.permutation(len(self.client_data))
+                hists = [self.hists[i] for i in order]
+                sizes = [self.sizes[i] for i in order]
+                fleet = mobility.sample_fleet(self.rng, cfg, hists, sizes)
+                parts = order                   # parts[j]: fleet[j]'s data
+            else:
+                fleet, parts = self.world.fleet(self.hists, self.sizes)
 
-        alpha = self._alpha(fleet, t) if fleet else np.zeros(0, np.int32)
+        with self.obs.span("round/select", round=t, fleet=len(fleet)):
+            alpha = self._alpha(fleet, t) if fleet else np.zeros(0, np.int32)
         return PendingRound(t, fleet, parts, alpha)
 
     def plan(self, pending: PendingRound) -> RoundPlan:
         """Phase 2: SUBP2-4 resource allocation for one pending round."""
-        return plan_round(self.cfg, pending.fleet, self.model_bits,
-                          self.cfg.local_steps, b_prev=self.b_prev,
-                          alpha_override=pending.alpha,
-                          planner=self.run.planner)
+        # span key mirrors the jax planner's jit cache key (the padded
+        # bucket size) so the first dispatch per bucket tags as "compile"
+        bucket = bucket_size(len(pending.fleet)) if pending.fleet else 0
+        key = (self.run.planner, bucket) if self.run.planner == "jax" else None
+        # no sync needed: plan_round unpacks to host scalars (self-fencing)
+        with self.obs.span("round/plan", key=key, round=pending.t,
+                           planner=self.run.planner, bucket=bucket):
+            plan = plan_round(self.cfg, pending.fleet, self.model_bits,
+                              self.cfg.local_steps, b_prev=self.b_prev,
+                              alpha_override=pending.alpha,
+                              planner=self.run.planner)
+        return plan
 
     def finish_round(self, pending: PendingRound, plan: RoundPlan) -> RoundLog:
         """Phase 3: execute the planned round (training, generation,
@@ -352,12 +387,16 @@ class GenFVRunner:
         aug = None
         loss = 0.0
         if use_aigc:
-            counts = label_schedule(plan.b_gen if use_fl else cfg.gen_batch * 4,
-                                    self.classes)
-            self.server.generate(counts)
-            aug, aug_loss = self.server.train_augmented(
-                cfg.local_steps * cfg.rsu_steps_factor, cfg.batch_size,
-                lr=CLIENT_LR)
+            with self.obs.span("round/generate", round=t,
+                               b_gen=plan.b_gen) as sp:
+                counts = label_schedule(
+                    plan.b_gen if use_fl else cfg.gen_batch * 4,
+                    self.classes)
+                self.server.generate(counts)
+                aug, aug_loss = self.server.train_augmented(
+                    cfg.local_steps * cfg.rsu_steps_factor, cfg.batch_size,
+                    lr=CLIENT_LR)
+                sp.sync = aug
             if not use_fl:
                 loss = aug_loss
 
@@ -376,75 +415,80 @@ class GenFVRunner:
             fsizes = []                # sizes of the finite (kept) models
             bimgs, blabels = [], []    # vectorized engine path
             n_poison = 0               # poisoned batches inside the dispatch
-            for pos, j in enumerate(plan.selected):
-                if survive is not None and not survive[pos]:
-                    dropped += 1
-                    continue
-                if rf is not None and rf.departed[pos]:
-                    dropped += 1       # forced exit: the update never arrives
-                    forced_out.append(fleet[j].vid)
-                    continue
-                v = fleet[j]
-                di, dl = self.client_data[parts[j]]
-                if len(dl) < 2:
-                    continue
-                is_late = late_mask is not None and bool(late_mask[pos])
-                is_poisoned = rf is not None and bool(rf.poisoned[pos])
-                if run.vectorized:
-                    bi, bl = self.engine.sample_batches(self.rng, di, dl)
-                    if is_late:
-                        # missed the deadline: train on the already-sampled
-                        # batches outside the fused dispatch and buffer the
-                        # update for a staleness-discounted merge next round
-                        late += 1
+            with self.obs.span("round/local_sgd", round=t,
+                               selected=len(plan.selected),
+                               vectorized=int(run.vectorized)):
+                for pos, j in enumerate(plan.selected):
+                    if survive is not None and not survive[pos]:
+                        dropped += 1
+                        continue
+                    if rf is not None and rf.departed[pos]:
+                        dropped += 1   # forced exit: the update never arrives
+                        forced_out.append(fleet[j].vid)
+                        continue
+                    v = fleet[j]
+                    di, dl = self.client_data[parts[j]]
+                    if len(dl) < 2:
+                        continue
+                    is_late = late_mask is not None and bool(late_mask[pos])
+                    is_poisoned = rf is not None and bool(rf.poisoned[pos])
+                    if run.vectorized:
+                        bi, bl = self.engine.sample_batches(self.rng, di, dl)
+                        if is_late:
+                            # missed the deadline: train on the
+                            # already-sampled batches outside the fused
+                            # dispatch and buffer the update for a
+                            # staleness-discounted merge next round
+                            late += 1
+                            if is_poisoned:
+                                rejected += 1  # poisoned AND late: dropped
+                            else:
+                                m, _ = local_sgd(
+                                    self.server.params, self.cnn_cfg,
+                                    jnp.asarray(bi), jnp.asarray(bl),
+                                    cfg.local_steps, CLIENT_LR, prox_mu)
+                                self.stale.push(StaleEntry(
+                                    m, v.data_size, v.emd, t, v.vid))
+                            continue
                         if is_poisoned:
-                            rejected += 1   # poisoned AND late: never merged
-                        else:
-                            m, _ = local_sgd(self.server.params, self.cnn_cfg,
-                                             jnp.asarray(bi), jnp.asarray(bl),
-                                             cfg.local_steps, CLIENT_LR,
-                                             prox_mu)
-                            self.stale.push(StaleEntry(m, v.data_size, v.emd,
-                                                       t, v.vid))
-                        continue
-                    if is_poisoned:
-                        # NaN batches corrupt the update inside the fused
-                        # dispatch; the in-kernel finiteness guard rejects it
-                        # there (one XLA program either way)
-                        bi = np.full_like(bi, np.nan)
-                        n_poison += 1
-                    bimgs.append(bi)
-                    blabels.append(bl)
-                else:
-                    m, l = client_update(self.server.params, self.cnn_cfg,
-                                         di, dl, self.rng, cfg.local_steps,
-                                         cfg.batch_size, lr=CLIENT_LR,
-                                         prox_mu=prox_mu)
-                    if is_poisoned:
-                        m = jax.tree.map(
-                            lambda x: jnp.full_like(x, jnp.nan), m)
-                    if is_late:
-                        late += 1
-                        if tree_finite(m):
-                            self.stale.push(StaleEntry(m, v.data_size, v.emd,
-                                                       t, v.vid))
-                        else:
+                            # NaN batches corrupt the update inside the fused
+                            # dispatch; the in-kernel finiteness guard
+                            # rejects it there (one XLA program either way)
+                            bi = np.full_like(bi, np.nan)
+                            n_poison += 1
+                        bimgs.append(bi)
+                        blabels.append(bl)
+                    else:
+                        m, l = client_update(self.server.params, self.cnn_cfg,
+                                             di, dl, self.rng, cfg.local_steps,
+                                             cfg.batch_size, lr=CLIENT_LR,
+                                             prox_mu=prox_mu)
+                        if is_poisoned:
+                            m = jax.tree.map(
+                                lambda x: jnp.full_like(x, jnp.nan), m)
+                        if is_late:
+                            late += 1
+                            if tree_finite(m):
+                                self.stale.push(StaleEntry(
+                                    m, v.data_size, v.emd, t, v.vid))
+                            else:
+                                rejected += 1
+                            continue
+                        if spec is not None and not tree_finite(m):
+                            # host-side guard (reference path): the vehicle
+                            # still counts as a participant (it trained and
+                            # uploaded; mirrors the in-kernel guard's
+                            # accounting) but its weight mass renormalizes
+                            # onto the finite survivors
                             rejected += 1
-                        continue
-                    if spec is not None and not tree_finite(m):
-                        # host-side guard (reference path): the vehicle still
-                        # counts as a participant (it trained and uploaded;
-                        # mirrors the in-kernel guard's accounting) but its
-                        # weight mass renormalizes onto the finite survivors
-                        rejected += 1
-                        msizes.append(v.data_size)
-                        memds.append(v.emd)
-                        continue
-                    models.append(m)
-                    fsizes.append(v.data_size)
-                    loss += l
-                msizes.append(v.data_size)
-                memds.append(v.emd)
+                            msizes.append(v.data_size)
+                            memds.append(v.emd)
+                            continue
+                        models.append(m)
+                        fsizes.append(v.data_size)
+                        loss += l
+                    msizes.append(v.data_size)
+                    memds.append(v.emd)
             n_trained = len(msizes)
 
             # staleness-discounted weights: rho_eff ∝ |D_n| * gamma^age,
@@ -455,53 +499,72 @@ class GenFVRunner:
             s_emds = [e.emd for e in stale_entries]
             stale_merged = len(stale_entries)
 
-            if run.vectorized and bimgs:
-                if spec is not None and (n_poison or s_models):
-                    # recovery dispatch: joint fresh+stale weights, and the
-                    # guarded kernel IFF a poisoned batch is actually inside
-                    # it. The guard is numerically neutral on finite inputs,
-                    # but it is a different fused XLA program (ULP-level
-                    # drift in the vmapped SGD), so clean rounds must keep
-                    # dispatching the seed's kernel to stay bitwise.
-                    all_sizes = np.asarray(list(msizes) + s_sizes, np.float64)
-                    rho_all = all_sizes / max(all_sizes.sum(), 1.0)
-                    emds_all = memds + s_emds
-                    out = self.server.fleet_round(
-                        self.engine, bimgs, blabels, msizes, memds,
-                        aug if use_aigc else None, prox_mu,
-                        guard=bool(n_poison),
-                        rhos=rho_all[:len(msizes)] if s_models else None,
-                        kappa_emds=emds_all if s_models else None)
-                    if n_poison:
-                        _, (k1, k2), losses, finite = out
-                        rejected += int((~finite).sum())
-                        loss = float(losses[finite].mean()) if finite.any() \
-                            else 0.0
+            # span key mirrors the fused dispatch's jit cache key — the
+            # padded fleet bucket and the finiteness-guard flag select the
+            # compiled XLA program (fl/fleet.py)
+            agg_bucket = bucket_size(len(bimgs)) if bimgs else 0
+            agg_guard = bool(spec is not None and n_poison)
+            agg_key = ((agg_bucket, agg_guard)
+                       if run.vectorized and bimgs else None)
+            if self.obs.enabled and run.vectorized and bimgs:
+                self.obs.gauge("fleet/bucket", agg_bucket)
+                self.obs.observe("fleet/pad_waste",
+                                 agg_bucket - len(bimgs))
+            with self.obs.span("round/aggregate", key=agg_key, round=t,
+                               guard=int(agg_guard),
+                               stale=stale_merged) as sp:
+                if run.vectorized and bimgs:
+                    if spec is not None and (n_poison or s_models):
+                        # recovery dispatch: joint fresh+stale weights, and
+                        # the guarded kernel IFF a poisoned batch is actually
+                        # inside it. The guard is numerically neutral on
+                        # finite inputs, but it is a different fused XLA
+                        # program (ULP-level drift in the vmapped SGD), so
+                        # clean rounds must keep dispatching the seed's
+                        # kernel to stay bitwise.
+                        all_sizes = np.asarray(list(msizes) + s_sizes,
+                                               np.float64)
+                        rho_all = all_sizes / max(all_sizes.sum(), 1.0)
+                        emds_all = memds + s_emds
+                        out = self.server.fleet_round(
+                            self.engine, bimgs, blabels, msizes, memds,
+                            aug if use_aigc else None, prox_mu,
+                            guard=bool(n_poison),
+                            rhos=rho_all[:len(msizes)] if s_models else None,
+                            kappa_emds=emds_all if s_models else None)
+                        if n_poison:
+                            _, (k1, k2), losses, finite = out
+                            rejected += int((~finite).sum())
+                            loss = float(losses[finite].mean()) \
+                                if finite.any() else 0.0
+                        else:
+                            _, (k1, k2), losses = out
+                            loss = float(losses.mean())
+                        if s_models:
+                            w = (k1 * rho_all[len(msizes):]).tolist()
+                            self.server.params = add_weighted(
+                                self.server.params, s_models, w)
                     else:
-                        _, (k1, k2), losses = out
+                        _, (k1, k2), losses = self.server.fleet_round(
+                            self.engine, bimgs, blabels, msizes, memds,
+                            aug if use_aigc else None, prox_mu)
                         loss = float(losses.mean())
-                    if s_models:
-                        w = (k1 * rho_all[len(msizes):]).tolist()
-                        self.server.params = add_weighted(
-                            self.server.params, s_models, w)
                 else:
-                    _, (k1, k2), losses = self.server.fleet_round(
-                        self.engine, bimgs, blabels, msizes, memds,
-                        aug if use_aigc else None, prox_mu)
-                    loss = float(losses.mean())
-            else:
-                if spec is not None and not models and not s_models and msizes:
-                    # every upload rejected: the federated mass degrades to
-                    # the round-start global (no federated progress), mirroring
-                    # the guarded kernel's all-poisoned fallback
-                    models, fsizes = [self.server.params], [sum(msizes)]
-                # sizes follow the KEPT models (guard-renormalized weights);
-                # the kappa2 EMD pool spans every participant, matching the
-                # vectorized kernel's accounting
-                _, (k1, k2) = self.server.aggregate(
-                    models + s_models, list(fsizes) + s_sizes,
-                    memds + s_emds, aug if use_aigc else None)
-                loss = loss / max(len(models), 1)
+                    if spec is not None and not models and not s_models \
+                            and msizes:
+                        # every upload rejected: the federated mass degrades
+                        # to the round-start global (no federated progress),
+                        # mirroring the guarded kernel's all-poisoned
+                        # fallback
+                        models, fsizes = [self.server.params], [sum(msizes)]
+                    # sizes follow the KEPT models (guard-renormalized
+                    # weights); the kappa2 EMD pool spans every participant,
+                    # matching the vectorized kernel's accounting
+                    _, (k1, k2) = self.server.aggregate(
+                        models + s_models, list(fsizes) + s_sizes,
+                        memds + s_emds, aug if use_aigc else None)
+                    loss = loss / max(len(models), 1)
+                sp.sync = self.server.params
 
         if run.strategy == "aigc_only":
             self.server.params = aug
@@ -515,23 +578,54 @@ class GenFVRunner:
         # window if longer — AIGC strategies only), floored so an empty round
         # still consumes its scheduling slot, capped at t_max
         if self.world is not None:
-            if forced_out:
-                # fault-injected departures leave before the step (no RNG
-                # consumed, so a benign spec leaves the stream untouched)
-                self.world.remove(forced_out)
-            t_rsu = plan.t_rsu if use_aigc else 0.0
-            dt = max(t_round, t_rsu) if plan.selected else cfg.t_max
-            self.world.step(self.rng,
-                            float(np.clip(dt, 0.25 * cfg.t_max, cfg.t_max)))
+            with self.obs.span("round/world_step", round=t):
+                if forced_out:
+                    # fault-injected departures leave before the step (no
+                    # RNG consumed, so a benign spec leaves the stream
+                    # untouched)
+                    self.world.remove(forced_out)
+                t_rsu = plan.t_rsu if use_aigc else 0.0
+                dt = max(t_round, t_rsu) if plan.selected else cfg.t_max
+                self.world.step(self.rng, float(
+                    np.clip(dt, 0.25 * cfg.t_max, cfg.t_max)))
 
-        acc = float(self._eval(self.server.params, self.test_imgs,
-                               self.test_labels))
+        # float() forces the device value: the eval span self-fences
+        with self.obs.span("round/eval", round=t):
+            acc = float(self._eval(self.server.params, self.test_imgs,
+                                   self.test_labels))
         log = RoundLog(t, n_trained, plan.t_bar, plan.b_gen, k2,
                        emd_bar, float(loss), acc, dropped, late, rejected,
-                       stale_merged, float(t_round))
+                       stale_merged, float(t_round),
+                       bcd_iters=plan.bcd_iters,
+                       planner_converged=int(plan.converged))
+        self._record_round(log)
         self.logs.append(log)
         self.next_round = t + 1
         return log
+
+    def _record_round(self, log: RoundLog) -> None:
+        """Feed the round's already-computed diagnostics — previously
+        discarded on the floor — into the obs metrics registry. Pure
+        host-side reads; the enabled guard keeps the null path free of even
+        the kwargs allocations."""
+        obs = self.obs
+        if not obs.enabled:
+            return
+        run = self.run
+        obs.observe("planner/bcd_iters", log.bcd_iters, planner=run.planner)
+        obs.count("planner/converged", log.planner_converged,
+                  planner=run.planner)
+        obs.count("planner/rounds", 1, planner=run.planner)
+        obs.observe("round/selected", log.selected)
+        obs.observe("round/t_bar", log.t_bar)
+        obs.observe("round/t_round", log.t_round)
+        obs.observe("round/t_overrun", log.t_round - log.t_bar)
+        obs.count("faults/late", log.late)
+        obs.count("faults/rejected", log.rejected)
+        obs.count("faults/stale_merged", log.stale_merged)
+        obs.count("faults/dropped", log.dropped)
+        if self.world is not None:
+            self.world.observe(obs)
 
     def run_round(self, t: int) -> RoundLog:
         pending = self.begin_round(t)
@@ -548,12 +642,23 @@ class GenFVRunner:
         for t in range(self.next_round, self.run.rounds):
             log = self.run_round(t)
             if verbose:
-                print(f"[{self.run.strategy}] round {t:3d} sel={log.selected:2d} "
-                      f"drop={log.dropped} t_bar={log.t_bar:5.2f}s b={log.b_gen:4d} "
-                      f"k2={log.kappa2:.3f} loss={log.loss:.3f} acc={log.accuracy:.3f}")
+                # rate-limited structured logging (repro.obs): same human
+                # rendering as the old bare print, but fast rounds coalesce
+                # and the line doubles as a trace event when obs is enabled.
+                # The final round always lands (force=).
+                log_line(
+                    self.obs, "train/round",
+                    f"[{self.run.strategy}] round {t:3d} "
+                    f"sel={log.selected:2d} drop={log.dropped} "
+                    f"t_bar={log.t_bar:5.2f}s b={log.b_gen:4d} "
+                    f"k2={log.kappa2:.3f} loss={log.loss:.3f} "
+                    f"acc={log.accuracy:.3f}",
+                    force=t == self.run.rounds - 1,
+                    round=t, accuracy=log.accuracy)
             if checkpoint_path is not None and \
                     (t + 1) % max(checkpoint_every, 1) == 0:
-                self.save_checkpoint(checkpoint_path)
+                with self.obs.span("round/checkpoint", round=t):
+                    self.save_checkpoint(checkpoint_path)
         return RunResult(list(self.logs))
 
     # ------------------------------------------------------------------
@@ -567,7 +672,8 @@ class GenFVRunner:
     # (tests/test_faults.py golden resume, both planner backends).
     # ------------------------------------------------------------------
     _LOG_INT_FIELDS = ("round", "selected", "b_gen", "dropped", "late",
-                       "rejected", "stale_merged")
+                       "rejected", "stale_merged", "bcd_iters",
+                       "planner_converged")
 
     def _logs_state(self) -> dict:
         return {f.name: np.asarray([getattr(l, f.name) for l in self.logs],
@@ -608,7 +714,7 @@ class GenFVRunner:
             }),
         }
         meta = {"schema": self.CKPT_SCHEMA,
-                "run": dataclasses.asdict(self.run)}
+                "run": run_payload(self.run)}
         return save_tree(path, state, metadata=meta)
 
     def load_checkpoint(self, path: str) -> int:
@@ -619,10 +725,10 @@ class GenFVRunner:
         if meta.get("schema") != self.CKPT_SCHEMA:
             raise ValueError(f"checkpoint schema {meta.get('schema')!r} != "
                              f"{self.CKPT_SCHEMA!r}")
-        if meta.get("run") != dataclasses.asdict(self.run):
+        if meta.get("run") != run_payload(self.run):
             raise ValueError(
                 "checkpoint was written by a different RunConfig: "
-                f"{meta.get('run')} vs {dataclasses.asdict(self.run)}")
+                f"{meta.get('run')} vs {run_payload(self.run)}")
         state = restore_tree(path)
 
         self.rng.bit_generator.state = json.loads(

@@ -27,6 +27,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import api
+from repro.obs import NULL_OBS
 
 
 @dataclass
@@ -60,11 +61,14 @@ def _merge_lane(cache, lane_cache, row: int):
 
 class ServeEngine:
     def __init__(self, cfg, params, *, slots: int = 4, max_len: int = 512,
-                 impl: str = "jnp", dtype=jnp.float32):
+                 impl: str = "jnp", dtype=jnp.float32, obs=None):
         self.cfg = cfg
         self.params = params
         self.slots = slots
         self.max_len = max_len
+        # repro.obs tracer: serve/prefill and serve/decode spans + queue
+        # counters; NULL_OBS keeps the hot tick loop allocation-free
+        self.obs = obs if obs is not None else NULL_OBS
         self.cache = api.init_cache(cfg, slots, max_len, dtype)
         self._prefill = jax.jit(api.make_prefill_step(cfg, impl=impl))
         self._decode = jax.jit(api.make_decode_step(cfg, impl=impl))
@@ -83,15 +87,22 @@ class ServeEngine:
         while free and self.waiting:
             slot = free.pop(0)
             req = self.waiting.pop(0)
-            lane = jax.tree.map(jnp.copy, self._lane_cache_template)
-            toks = jnp.asarray(req.prompt, jnp.int32)[None]
-            logits, lane = self._prefill(self.params, lane, {"tokens": toks})
-            self.cache = _merge_lane(self.cache, lane, slot)
-            tok = int(jnp.argmax(logits[0]))
+            # key=prompt length: each distinct prefill shape compiles its
+            # own program, and the span's first call per length tags it
+            with self.obs.span("serve/prefill", key=len(req.prompt),
+                               slot=slot, prompt_len=len(req.prompt)) as sp:
+                lane = jax.tree.map(jnp.copy, self._lane_cache_template)
+                toks = jnp.asarray(req.prompt, jnp.int32)[None]
+                logits, lane = self._prefill(self.params, lane,
+                                             {"tokens": toks})
+                self.cache = _merge_lane(self.cache, lane, slot)
+                tok = int(jnp.argmax(logits[0]))
+                sp.sync = self.cache
             req.out.append(tok)
             self.active[slot] = req
             self.positions[slot] = len(req.prompt)
             self.last_tok[slot] = tok
+            self.obs.count("serve/admitted")
 
     # ------------------------------------------------------------------
     def step(self):
@@ -99,10 +110,15 @@ class ServeEngine:
         self._admit()
         if not self.active:
             return []
-        toks = jnp.asarray(self.last_tok, jnp.int32)[:, None]
-        pos = jnp.asarray(self.positions, jnp.int32)[:, None]
-        logits, self.cache = self._decode(self.params, self.cache, toks, pos)
-        nxt = np.asarray(jnp.argmax(logits, -1))
+        with self.obs.span("serve/decode", key=self.slots,
+                           active=len(self.active)):
+            toks = jnp.asarray(self.last_tok, jnp.int32)[:, None]
+            pos = jnp.asarray(self.positions, jnp.int32)[:, None]
+            logits, self.cache = self._decode(self.params, self.cache,
+                                              toks, pos)
+            # np.asarray forces the device value: the span self-fences
+            nxt = np.asarray(jnp.argmax(logits, -1))
+        self.obs.count("serve/decode_tokens", len(self.active))
         finished = []
         for slot, req in list(self.active.items()):
             tok = int(nxt[slot])

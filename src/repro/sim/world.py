@@ -243,6 +243,17 @@ class VehicularWorld:
         """Vehicles holding a data partition (the potential FL clients)."""
         return int(np.sum(self.state.partition >= 0))
 
+    def observe(self, obs) -> None:
+        """Push the world's cumulative stats — tracked since construction
+        but previously never surfaced — into a `repro.obs` registry. Reads
+        only; never touches the rng or the arrays."""
+        obs.gauge("world/population", self.n)
+        obs.gauge("world/bound", self.n_bound)
+        obs.gauge("world/time_s", self.stats.time)
+        obs.gauge("world/arrivals", self.stats.arrivals)
+        obs.gauge("world/departures", self.stats.departures)
+        obs.gauge("world/blocked_arrivals", self.stats.blocked_arrivals)
+
     # ------------------------------------------------------------------
     def fleet(self, hists: Sequence[np.ndarray], sizes: Sequence[int]
               ) -> Tuple[List[Vehicle], np.ndarray]:
