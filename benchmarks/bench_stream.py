@@ -1,0 +1,145 @@
+"""Streaming-round benchmark: sustained rounds/hour under churn.
+
+For each (scenario, fault schedule) pair the same faulted cell runs twice —
+once through the synchronous `GenFVRunner.train()` loop (every round waits
+out its deadline) and once through the event-driven `StreamEngine` (rounds
+commit at quorum arrival, failed uploads retry with backoff, late updates
+merge on arrival). Both clocks are VIRTUAL: the sync baseline's round time
+is the realized `t_round` (deadline-clipped), the stream's is the engine's
+explicitly-advanced clock, so the headline ``rounds_per_hour`` ratio is a
+property of the protocol, not the host. A second stream run replays the
+same (seed, schedule) and must reproduce the commit sequence bitwise — that
+feeds the ``deterministic`` flag. Headline pairs are the churn stressors:
+`platoon` + platoon_mass_dropout and `rush_hour` + rush_hour_deep_fade.
+
+  PYTHONPATH=src python -m benchmarks.bench_stream [--quick] [--out PATH]
+
+Writes BENCH_stream.json (default: repo root) and prints the house
+``name,us_per_call,derived`` CSV lines. --quick shrinks to the two headline
+pairs at 3 rounds on a tiny train set (tier-1: tests/test_stream.py).
+"""
+from __future__ import annotations
+
+import argparse
+import os
+
+import numpy as np
+
+from benchmarks.common import emit, record, stopwatch, write_json
+from repro.configs.base import GenFVConfig, StreamConfig
+from repro.fl.rounds import GenFVRunner, RunConfig
+from repro.fl.stream import StreamEngine
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DEFAULT_OUT = os.path.join(REPO_ROOT, "BENCH_stream.json")
+
+HEADLINE = [("platoon", "platoon_mass_dropout"),
+            ("rush_hour", "rush_hour_deep_fade")]
+EXTRA = [("highway_free_flow", "compute_stragglers"),
+         ("highway_free_flow", "poison_minority"),
+         ("urban_stop_go", "mixed_stress")]
+
+#: streaming policy under test — quorum commit + cadence + bounded retries
+STREAM = dict(quorum=0.6, cadence_s=0.1, deadline_slack=0.25, retry_budget=2)
+
+
+def make_runs(quick: bool):
+    sizes = (dict(rounds=3, train_size=300, test_size=32, width_mult=0.0625)
+             if quick else
+             dict(rounds=8, train_size=600, test_size=64, width_mult=0.0625))
+    pairs = HEADLINE if quick else HEADLINE + EXTRA
+    return sizes, pairs
+
+
+def fl_cfg(quick: bool) -> GenFVConfig:
+    return GenFVConfig(batch_size=8, local_steps=2,
+                       num_vehicles=6 if quick else 10)
+
+
+def _stream_run(run: RunConfig, cfg: GenFVConfig):
+    runner = GenFVRunner(run, fl_cfg=cfg)
+    eng = StreamEngine(runner, StreamConfig(**STREAM))
+    res = eng.run()
+    return runner, eng, res
+
+
+def _sync_virtual_s(res, cfg: GenFVConfig) -> float:
+    """Virtual seconds the synchronous loop spends: realized round time for
+    planned rounds, a full deadline for empty ones (the RSU still waits)."""
+    t_bar = res.curve("t_bar")
+    t_round = res.curve("t_round")
+    return float(np.where(t_bar > 0, t_round, cfg.t_max).sum())
+
+
+def run(quick: bool = True, out: str | None = None) -> dict:
+    sizes, pairs = make_runs(quick)
+    cfg = fl_cfg(quick)
+
+    rows = []
+    deterministic = True
+    sw = stopwatch()
+    for scenario, fault in pairs:
+        frun = RunConfig(strategy="genfv", scenario=scenario, seed=0,
+                         faults=fault, **sizes)
+        sync_res = GenFVRunner(frun, fl_cfg=cfg).train()
+        _, eng, stream_res = _stream_run(frun, cfg)
+        _, eng2, stream_res2 = _stream_run(frun, cfg)
+        same = (eng.slogs == eng2.slogs
+                and stream_res.logs == stream_res2.logs)
+        deterministic &= same
+
+        sync_s = _sync_virtual_s(sync_res, cfg)
+        stream_s = float(eng.now)
+        rungs = [sum(1 for s in eng.slogs if s.rung == r) for r in range(4)]
+        row = {
+            "scenario": scenario,
+            "faults": fault,
+            "rounds": len(eng.slogs),
+            "virtual_s_sync": sync_s,
+            "virtual_s_stream": stream_s,
+            "rounds_per_hour_sync": 3600.0 * len(sync_res.logs) / sync_s,
+            "rounds_per_hour_stream": 3600.0 * len(eng.slogs) / stream_s,
+            "speedup": sync_s / stream_s,
+            "acc_sync": float(sync_res.curve("accuracy")[-1]),
+            "acc_stream": float(stream_res.curve("accuracy")[-1]),
+            "rungs": rungs,
+            "retries": int(sum(s.retries for s in eng.slogs)),
+            "exhausted": int(sum(s.exhausted for s in eng.slogs)),
+            "merged_inflight": int(sum(s.merged_inflight
+                                       for s in eng.slogs)),
+            "gap_merged": int(sum(s.gap_merged for s in eng.slogs)),
+            "stale_dropped": int(sum(s.stale_dropped for s in eng.slogs)),
+            "still_inflight": len(eng.inflight),
+            "deterministic": same,
+            "accuracy_curve_stream": stream_res.curve("accuracy").tolist(),
+        }
+        rows.append(row)
+        emit(f"stream/{scenario}+{fault}",
+             sw.elapsed_s * 1e6 / max(len(rows), 1),
+             f"rph_stream={row['rounds_per_hour_stream']:.1f} "
+             f"rph_sync={row['rounds_per_hour_sync']:.1f} "
+             f"x{row['speedup']:.2f} acc={row['acc_stream']:.3f} "
+             f"rungs={rungs} retry={row['retries']} "
+             f"merged={row['merged_inflight'] + row['gap_merged']} "
+             f"det={same}")
+
+    doc = record("async streaming RSU rounds (fl/stream.py quorum commit)",
+                 quick=quick,
+                 config={"rounds": sizes["rounds"], "stream": dict(STREAM)},
+                 results=rows, rounds=sizes["rounds"], pairs=rows,
+                 deterministic=deterministic, wall_s=sw.elapsed_s)
+    write_json(doc, out or DEFAULT_OUT, indent=1)
+    return doc
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    doc = run(quick=args.quick, out=args.out)
+    return 0 if doc["deterministic"] else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -42,6 +42,11 @@ AUTOGEN markers are rewritten by `benchmarks/make_experiments_md.py`.
 <!-- AUTOGEN:obs-timings -->
 <!-- /AUTOGEN:obs-timings -->
 
+## Streaming rounds — sustained rounds/hour under churn
+
+<!-- AUTOGEN:streaming -->
+<!-- /AUTOGEN:streaming -->
+
 ## Roofline (single-pod)
 
 <!-- AUTOGEN:roofline-sp -->
@@ -208,6 +213,38 @@ def obs_timing_tables(directory: str = SWEEP_ART) -> str:
     return "\n\n".join(blocks)
 
 
+def streaming_table(path: str | None = None) -> str:
+    """Headline table from BENCH_stream.json (repo root): virtual rounds/hour
+    of the quorum-commit StreamEngine vs the synchronous deadline loop on the
+    same faulted cells, plus the degradation-ladder rung histogram and the
+    retry/merge ledger."""
+    path = path or os.path.join(ROOT, "BENCH_stream.json")
+    if not os.path.exists(path):
+        return ("_no streaming artifact yet — run "
+                "`PYTHONPATH=src python -m benchmarks.bench_stream`_")
+    doc = json.load(open(path))
+    lines = [f"`{os.path.basename(path)}` — quorum={doc['config']['stream']['quorum']}, "
+             f"retry_budget={doc['config']['stream']['retry_budget']}, "
+             f"{doc['config']['rounds']} rounds/cell, "
+             f"deterministic replay: **{doc['deterministic']}**",
+             "",
+             "| scenario | faults | rph stream | rph sync | speedup | "
+             "acc stream | acc sync | rungs 0/1/2/3 | retries | merged | "
+             "dropped |",
+             "|---|---|---|---|---|---|---|---|---|---|---|"]
+    for r in doc["pairs"]:
+        rungs = "/".join(str(x) for x in r["rungs"])
+        lines.append(
+            f"| {r['scenario']} | {r['faults']} "
+            f"| {r['rounds_per_hour_stream']:.0f} "
+            f"| {r['rounds_per_hour_sync']:.0f} "
+            f"| {r['speedup']:.2f}x | {r['acc_stream']:.3f} "
+            f"| {r['acc_sync']:.3f} | {rungs} | {r['retries']} "
+            f"| {r['merged_inflight'] + r['gap_merged']} "
+            f"| {r['stale_dropped']} |")
+    return "\n".join(lines)
+
+
 def theorem1_tables(directory: str = SWEEP_ART) -> str:
     """Per-scenario bound-tightness tables from *.theorem1.json, formatted
     by the same helper `Theorem1Report.to_markdown` uses."""
@@ -241,6 +278,7 @@ def main():
     md = inject(md, "sweeps", sweep_tables())
     md = inject(md, "theorem1", theorem1_tables())
     md = inject(md, "obs-timings", obs_timing_tables())
+    md = inject(md, "streaming", streaming_table())
     md = inject(md, "roofline-sp", roofline_table(recs, "16x16", opt))
     md = inject(md, "roofline-mp", roofline_table(recs, "2x16x16"))
     md = inject(md, "dryrun", dryrun_summary(recs))

@@ -35,6 +35,20 @@ def _path_str(path) -> str:
     return "/".join(parts)
 
 
+def _json_default(o):
+    """Manifest metadata arrives from config payloads that may carry numpy
+    scalars (a np.float64 knob, an int64 round index); json.dumps would
+    otherwise raise TypeError deep inside the atomic write."""
+    if isinstance(o, np.integer):
+        return int(o)
+    if isinstance(o, np.floating):
+        return float(o)
+    if isinstance(o, np.bool_):
+        return bool(o)
+    raise TypeError(f"manifest metadata is not JSON-serializable: "
+                    f"{type(o).__name__}")
+
+
 def save_tree(path: str, tree: Any, metadata: dict | None = None) -> str:
     """Atomically write `tree` to `path` (.npz appended if missing, matching
     np.savez). Returns the final path."""
@@ -56,7 +70,8 @@ def save_tree(path: str, tree: Any, metadata: dict | None = None) -> str:
     tmp = f"{path}.tmp.{os.getpid()}"
     try:
         with open(tmp, "wb") as f:
-            np.savez(f, __manifest__=json.dumps(manifest), **arrays)
+            np.savez(f, __manifest__=json.dumps(
+                manifest, default=_json_default), **arrays)
             f.flush()
             os.fsync(f.fileno())
         os.replace(tmp, path)

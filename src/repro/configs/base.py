@@ -251,6 +251,69 @@ V5E = HardwareSpec()
 
 
 # ---------------------------------------------------------------------------
+# Streaming RSU round policy (fl/stream.py). Grouped here (rather than on
+# GenFVConfig) because these are SERVICE knobs — how the RSU commits rounds —
+# not physical-layer parameters; RunConfig carries one as `stream`.
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class StreamConfig:
+    """Quorum / retry / cadence policy for the event-driven streaming round
+    engine (`repro.fl.stream.StreamEngine`). Frozen + flat so it rides inside
+    the frozen `RunConfig` (hashable grid cells, JSON-able checkpoints).
+
+    The defaults reproduce the synchronous round loop exactly: quorum=1.0
+    commits on the last planned upload, cadence 0 fires rounds back-to-back,
+    and with no fault schedule attached no retry is ever scheduled
+    (tests/test_stream.py pins the bitwise sync parity).
+    """
+    # Fraction of the round's SELECTED uploads that must arrive before the
+    # RSU commits (quorum count = ceil(quorum * K), floored at 1).
+    quorum: float = 1.0
+    # Minimum virtual seconds between consecutive round starts; 0 = a new
+    # round fires the instant the previous one commits (sync semantics).
+    cadence_s: float = 0.0
+    # Degradation rung 1: when the quorum misses the planned close t_bar,
+    # the deadline is extended ONCE to t_bar * (1 + deadline_slack).
+    deadline_slack: float = 0.25
+    # Upload retries after a failed (deep-faded) attempt, with capped
+    # exponential backoff: wait min(backoff * 2^a, cap) before attempt a+1.
+    retry_budget: int = 2
+    retry_backoff_s: float = 0.25
+    retry_backoff_cap_s: float = 2.0
+    # Merge-on-arrival discount for uploads landing after their round's
+    # commit: weight ∝ size * discount^age, dropped past max_staleness
+    # rounds (mirrors FaultSpec's recovery policy, but streaming needs it
+    # even without a fault schedule — quorum < 1 makes on-time stragglers).
+    staleness_discount: float = 0.5
+    max_staleness: int = 2
+
+    def __post_init__(self):
+        if not 0.0 < self.quorum <= 1.0:
+            raise ValueError(f"quorum={self.quorum} outside (0, 1]")
+        if self.cadence_s < 0.0:
+            raise ValueError("cadence_s must be >= 0")
+        if self.deadline_slack < 0.0:
+            raise ValueError("deadline_slack must be >= 0")
+        if self.retry_budget < 0:
+            raise ValueError("retry_budget must be >= 0")
+        if self.retry_backoff_s <= 0.0:
+            raise ValueError("retry_backoff_s must be > 0")
+        if self.retry_backoff_cap_s < self.retry_backoff_s:
+            raise ValueError("retry_backoff_cap_s must be >= retry_backoff_s")
+        if not 0.0 < self.staleness_discount <= 1.0:
+            raise ValueError("staleness_discount must be in (0, 1]")
+        if self.max_staleness < 0:
+            raise ValueError("max_staleness must be >= 0")
+
+    def to_payload(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_payload(cls, payload: dict) -> "StreamConfig":
+        return cls(**payload)
+
+
+# ---------------------------------------------------------------------------
 # FL / GenFV experiment config (paper Section VI defaults).
 # ---------------------------------------------------------------------------
 @dataclass(frozen=True)

@@ -5,3 +5,4 @@ from repro.fl.fleet import FleetEngine
 from repro.fl.rounds import (PLANNERS, STRATEGIES, GenFVRunner, PendingRound,
                              RoundLog, RunConfig, RunResult,
                              eval_stream_seed, validate_run_fields)
+from repro.fl.stream import InFlight, StreamEngine, StreamLog

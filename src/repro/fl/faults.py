@@ -43,7 +43,8 @@ from repro.core import channel, mobility
 
 __all__ = [
     "FaultSpec", "RoundFaults", "FaultInjector", "StaleEntry", "StaleBuffer",
-    "register_fault", "get_fault", "fault_names", "realized_times",
+    "register_fault", "get_fault", "fault_names", "realized_arrivals",
+    "realized_times",
 ]
 
 
@@ -189,6 +190,23 @@ class FaultInjector:
         return RoundFaults(slow, outage, departed, poisoned)
 
 
+def _faded_upload_times(cfg: GenFVConfig, fleet: Sequence, plan,
+                        model_bits: float, mask: np.ndarray,
+                        fade_db: float) -> np.ndarray:
+    """eq.-10 upload times for the `mask`ed selected positions, re-priced at
+    the PLANNED (l, phi) under an extra `fade_db` shadow fade. Shared by the
+    synchronous `realized_times` (outage = slow-but-successful upload) and
+    the streaming `realized_arrivals` (outage = failed attempt + retry)."""
+    idx = [plan.selected[i] for i in np.nonzero(mask)[0]]
+    xs = np.array([fleet[j].x for j in idx], np.float64)
+    gains = np.array([fleet[j].gain_db for j in idx], np.float64)
+    dists = mobility.rsu_distances(cfg, xs)
+    return channel.upload_times(
+        cfg, model_bits, np.asarray(plan.l, np.float64)[mask],
+        np.asarray(plan.phi, np.float64)[mask], dists,
+        gain_db=gains - fade_db)
+
+
 def realized_times(cfg: GenFVConfig, fleet: Sequence, plan,
                    model_bits: float, rf: RoundFaults,
                    fade_db: float) -> np.ndarray:
@@ -200,15 +218,75 @@ def realized_times(cfg: GenFVConfig, fleet: Sequence, plan,
     t_cp = rf.slowdown * np.asarray(plan.t_cp, np.float64)
     t_mu = np.asarray(plan.t_mu, np.float64).copy()
     if rf.outage.any():
-        idx = [plan.selected[i] for i in np.nonzero(rf.outage)[0]]
-        xs = np.array([fleet[j].x for j in idx], np.float64)
-        gains = np.array([fleet[j].gain_db for j in idx], np.float64)
-        dists = mobility.rsu_distances(cfg, xs)
-        t_mu[rf.outage] = channel.upload_times(
-            cfg, model_bits, np.asarray(plan.l, np.float64)[rf.outage],
-            np.asarray(plan.phi, np.float64)[rf.outage], dists,
-            gain_db=gains - fade_db)
+        t_mu[rf.outage] = _faded_upload_times(cfg, fleet, plan, model_bits,
+                                              rf.outage, fade_db)
     return t_cp + t_mu
+
+
+#: entropy tag keying the per-attempt retry stream ("RTRY"), spawned per
+#: round alongside — but distinct from — the draw() stream.
+_RETRY_KEY = 0x52545259
+
+
+def realized_arrivals(cfg: GenFVConfig, fleet: Sequence, plan,
+                      model_bits: float, rf: RoundFaults, spec: FaultSpec,
+                      t: int, *, retry_budget: int, backoff_s: float,
+                      backoff_cap_s: float
+                      ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Streaming-mode realization (fl/stream.py): per-selected ABSOLUTE
+    upload-completion offsets from the round start, with retry/backoff for
+    outaged uploads.
+
+    Unlike the synchronous `realized_times` — where an outage is a
+    slow-but-successful upload the deadline judges — a streaming outage is a
+    FAILED attempt: the transfer dies after the deep-faded airtime, the
+    vehicle backs off min(backoff_s * 2^a, backoff_cap_s), and retries.
+    Each retry draws channel recovery from a round-keyed per-attempt stream
+    (`SeedSequence((spec.seed, t, _RETRY_KEY))`, one [K, budget] uniform
+    block in fixed order — pure function of (spec, round, K), resumable):
+    a recovered attempt is re-priced through the same eq.-10 pricing at the
+    vehicle's refreshed (nominal) channel gain; a still-faded one burns the
+    faded airtime again. A vehicle whose retry budget exhausts never
+    arrives.
+
+    Returns ``(times, retries, exhausted)`` over the K selected positions:
+    arrival offsets (np.inf = the update never arrives), retry attempts
+    consumed, and the permanently-failed mask. A departed vehicle's retry is
+    NEVER scheduled — its update can never arrive (times=inf, retries=0).
+    """
+    k = len(plan.selected)
+    t_cp = rf.slowdown * np.asarray(plan.t_cp, np.float64)
+    t_mu = np.asarray(plan.t_mu, np.float64)
+    times = t_cp + t_mu
+    retries = np.zeros(k, np.int64)
+    exhausted = np.zeros(k, bool)
+    retrying = rf.outage & ~rf.departed   # departed: no retry, ever
+    if retrying.any():
+        t_fade = np.zeros(k, np.float64)
+        t_fade[retrying] = _faded_upload_times(
+            cfg, fleet, plan, model_bits, retrying, spec.outage_fade_db)
+        rng = np.random.default_rng(
+            np.random.SeedSequence(entropy=(spec.seed, t, _RETRY_KEY)))
+        # one fixed-shape block, drawn whether or not every attempt is used
+        u = rng.random((k, retry_budget)) if retry_budget else \
+            np.zeros((k, 0))
+        for pos in np.nonzero(retrying)[0]:
+            acc = t_cp[pos] + t_fade[pos]        # attempt 0 dies in the fade
+            recovered = False
+            for a in range(retry_budget):
+                acc += min(backoff_s * (2.0 ** a), backoff_cap_s)
+                retries[pos] += 1
+                if u[pos, a] >= spec.outage_prob:
+                    acc += t_mu[pos]             # refreshed gain: nominal
+                    recovered = True
+                    break
+                acc += t_fade[pos]               # still deep-faded: burn it
+            if recovered:
+                times[pos] = acc
+            else:
+                times[pos] = np.inf
+                exhausted[pos] = True
+    return np.where(rf.departed, np.inf, times), retries, exhausted
 
 
 # ---------------------------------------------------------------------------
@@ -236,16 +314,23 @@ class StaleBuffer:
         return len(self.entries)
 
     def pop_mergeable(self, t: int, max_staleness: int
-                      ) -> Tuple[List[StaleEntry], List[int]]:
+                      ) -> Tuple[List[StaleEntry], List[int], int]:
         """Drain the buffer for the merge at round `t`: returns
-        (mergeable entries, ages). Entries older than max_staleness are
-        dropped (too stale to help — arXiv:2401.09656's bounded-staleness
-        regime)."""
+        (mergeable entries, ages, dropped). Entries older than
+        max_staleness are dropped — too stale to help (arXiv:2401.09656's
+        bounded-staleness regime) — and COUNTED: the round loop feeds the
+        drop count into RoundLog's fault ledger (`stale_dropped`) and the
+        `faults/stale_dropped` obs counter instead of discarding silently.
+        An entry exactly at ``age == max_staleness`` still merges (the
+        bound is inclusive; tests/test_faults.py pins the boundary)."""
         merge, ages = [], []
+        dropped = 0
         for e in self.entries:
             age = t - e.trained_round
             if age <= max_staleness:
                 merge.append(e)
                 ages.append(age)
+            else:
+                dropped += 1
         self.entries = []
-        return merge, ages
+        return merge, ages, dropped

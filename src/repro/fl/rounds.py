@@ -22,7 +22,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint import read_manifest, restore_tree, save_tree
-from repro.configs.base import GenFVConfig
+from repro.configs.base import GenFVConfig, StreamConfig
 from repro.configs.genfv_cifar import CNNConfig, cnn_config
 from repro.core import mobility, plan_round
 from repro.core.emd import add_weighted, tree_finite
@@ -117,6 +117,12 @@ class RunConfig:
     # fault-free loop (which then executes byte-identically to the seed:
     # tests/test_faults.py pins the no-injection equivalence).
     faults: str | None = None
+    # Streaming round policy (configs/base.py::StreamConfig) consumed by
+    # `repro.fl.stream.StreamEngine`; ignored by the synchronous `train()`
+    # loop. None means "no streaming policy configured" (StreamEngine then
+    # uses StreamConfig() defaults, which reproduce sync semantics). A plain
+    # dict is coerced so checkpoint/spec payloads round-trip through JSON.
+    stream: StreamConfig | None = None
     # Observability handle (repro.obs): an `Obs` tracer/metrics registry,
     # or None for the zero-overhead null path. Excluded from equality,
     # hashing and serialization (`run_payload`) — two runs differing only
@@ -127,6 +133,10 @@ class RunConfig:
     def __post_init__(self):
         validate_run_fields(self.strategy, self.scenario, self.planner,
                             self.dataset, self.faults)
+        if isinstance(self.stream, dict):
+            # frozen dataclass: rehydrate a JSON payload in place
+            object.__setattr__(self, "stream",
+                               StreamConfig.from_payload(self.stream))
 
 
 def run_payload(run: "RunConfig") -> dict:
@@ -134,8 +144,11 @@ def run_payload(run: "RunConfig") -> dict:
     RunConfig field except the `obs` handle (execution machinery, not
     configuration). Checkpoint fingerprints and sweep/spec artifacts all
     serialize through here so an attached tracer never leaks into (or
-    invalidates) persisted state."""
-    return {f.name: getattr(run, f.name)
+    invalidates) persisted state. The nested StreamConfig flattens to a
+    plain dict (RunConfig.__post_init__ coerces it back)."""
+    return {f.name: (getattr(run, f.name).to_payload()
+                     if f.name == "stream" and run.stream is not None
+                     else getattr(run, f.name))
             for f in dataclasses.fields(run) if f.name != "obs"}
 
 
@@ -154,6 +167,7 @@ class RoundLog:
     late: int = 0          # missed the round deadline (straggler/outage)
     rejected: int = 0      # non-finite (poisoned) updates the guard refused
     stale_merged: int = 0  # buffered late updates merged this round
+    stale_dropped: int = 0  # buffered updates aged past max_staleness
     t_round: float = 0.0   # realized wall-clock (= t_bar without faults)
     # -- planner diagnostics (core/planner.py; previously dropped) ---------
     bcd_iters: int = 0         # SUBP2-4 BCD outer iterations this round
@@ -180,8 +194,10 @@ class PendingRound:
 
 class GenFVRunner:
     #: manifest schema of `save_checkpoint` (bump on layout changes; v2
-    #: added the RoundLog planner diagnostics bcd_iters/planner_converged)
-    CKPT_SCHEMA = "repro.fl/runner-ckpt/v2"
+    #: added the RoundLog planner diagnostics bcd_iters/planner_converged,
+    #: v3 the stale_dropped ledger column and the streaming-state block
+    #: `repro.fl.stream.StreamEngine` appends)
+    CKPT_SCHEMA = "repro.fl/runner-ckpt/v3"
 
     def __init__(self, run: RunConfig, fl_cfg: GenFVConfig | None = None,
                  generator=None, engine: FleetEngine | None = None,
@@ -332,20 +348,23 @@ class GenFVRunner:
         return plan
 
     def finish_round(self, pending: PendingRound, plan: RoundPlan) -> RoundLog:
-        """Phase 3: execute the planned round (training, generation,
-        aggregation, world step, eval).
+        """Phase 3 (synchronous semantics): realize faults, enforce the
+        deadline t_bar*(1+slack), then execute the round.
 
-        With a `FaultSpec` attached the round additionally realizes that
-        schedule's faults, enforces a deadline of t_bar*(1+slack), buffers
-        late-but-finite updates for a staleness-discounted merge in a later
-        round and rejects poisoned ones via the in-kernel finiteness guard
-        (fl/faults.py). Without one every branch below reduces bitwise to
-        the seed semantics (tests/test_faults.py pins the equivalence)."""
-        run = self.run
+        With a `FaultSpec` attached the round buffers late-but-finite
+        updates for a staleness-discounted merge in a later round and
+        rejects poisoned ones via the in-kernel finiteness guard
+        (fl/faults.py). Without one every branch reduces bitwise to the
+        seed semantics (tests/test_faults.py pins the equivalence).
+
+        The execution body lives in `_execute_round`, parameterized by the
+        late/skip partition and the stale-merge set — `repro.fl.stream`'s
+        event-driven engine computes those from its quorum/deadline event
+        simulation instead and drives the same body (the async merge path),
+        so both loops share one aggregation/ledger/eval implementation."""
         cfg = self.cfg
         t = pending.t
-        fleet, parts = pending.fleet, pending.parts
-        self.b_prev = plan.b_gen
+        fleet = pending.fleet
 
         # ---- fault realization + round deadline ---------------------------
         spec = self.faults.spec if self.faults is not None else None
@@ -372,11 +391,61 @@ class GenFVRunner:
         # nothing. The legacy sampler has no vehicle persistence, so the
         # seed's semantics (everyone selected finishes) are kept there.
         survive = None
-        dropped = 0
         if self.world is not None and plan.selected:
             t_run = min(t_round, cfg.t_max)
             survive = dropout_mask(cfg, fleet, plan.selected, t_run)
 
+        # buffered late updates from EARLIER rounds become mergeable now;
+        # weights are staleness-discounted sizes rho_eff ∝ |D_n| * gamma^age
+        stale_models, stale_weights, stale_emds = [], [], []
+        stale_dropped = 0
+        if spec is not None and self.run.strategy != "aigc_only":
+            entries, ages, stale_dropped = self.stale.pop_mergeable(
+                t, spec.max_staleness)
+            stale_models = [e.params for e in entries]
+            stale_weights = [e.size * spec.staleness_discount ** a
+                             for e, a in zip(entries, ages)]
+            stale_emds = [e.emd for e in entries]
+
+        return self._execute_round(
+            pending, plan, rf=rf, late_mask=late_mask, t_round=t_round,
+            survive=survive, stale_models=stale_models,
+            stale_weights=stale_weights, stale_emds=stale_emds,
+            stale_dropped=stale_dropped, guard_host=spec is not None)
+
+    def _execute_round(self, pending: PendingRound, plan: RoundPlan, *,
+                       rf, late_mask, t_round: float, survive,
+                       stale_models: List, stale_weights: List[float],
+                       stale_emds: List[float], stale_dropped: int = 0,
+                       late_sink: Callable | None = None,
+                       skip_mask=None, guard_host: bool = False,
+                       dt_floor: float = 0.0) -> RoundLog:
+        """Execute one planned round: training, generation, aggregation,
+        world step, eval. Both round loops drive this body:
+
+        * synchronous (`finish_round`): late_mask from the fault deadline,
+          stale merges drained from `self.stale`, late updates pushed back
+          into it (the default `late_sink`);
+        * streaming (`repro.fl.stream.StreamEngine`): late/skip partition
+          from the quorum-commit event simulation, stale merges folded from
+          the in-flight queue at their arrival instants, late updates
+          sunk back into that queue with their realized due times, and
+          `dt_floor` carrying the streaming cadence into the world step.
+
+        `stale_weights` are the already-discounted size weights (the caller
+        owns the gamma^age policy); `guard_host` enables the host-side
+        finiteness checks of the sequential reference path; `skip_mask`
+        marks selected positions whose upload can never arrive (exhausted
+        retry budgets) — they count as dropped without consuming RNG."""
+        run = self.run
+        cfg = self.cfg
+        t = pending.t
+        fleet, parts = pending.fleet, pending.parts
+        self.b_prev = plan.b_gen
+        if late_sink is None:
+            late_sink = lambda entry, pos: self.stale.push(entry)  # noqa: E731
+
+        dropped = 0
         use_aigc = run.strategy in ("genfv", "aigc_only")
         use_fl = run.strategy != "aigc_only"
         prox_mu = 0.1 if run.strategy == "fedprox" else 0.0
@@ -401,15 +470,10 @@ class GenFVRunner:
                 loss = aug_loss
 
         n_trained = 0
-        late = rejected = stale_merged = 0
+        late = rejected = 0
+        stale_merged = len(stale_models)
         forced_out: List[int] = []        # vids force-departed this round
         msizes, memds = [], []
-        # buffered late updates from EARLIER rounds become mergeable now
-        # (drained before this round's stragglers are pushed)
-        stale_entries, stale_ages = [], []
-        if spec is not None and use_fl:
-            stale_entries, stale_ages = self.stale.pop_mergeable(
-                t, spec.max_staleness)
         if use_fl:
             models = []                # sequential reference path
             fsizes = []                # sizes of the finite (kept) models
@@ -425,6 +489,11 @@ class GenFVRunner:
                     if rf is not None and rf.departed[pos]:
                         dropped += 1   # forced exit: the update never arrives
                         forced_out.append(fleet[j].vid)
+                        continue
+                    if skip_mask is not None and skip_mask[pos]:
+                        # retry budget exhausted (streaming): the upload can
+                        # never arrive — dropped without consuming RNG
+                        dropped += 1
                         continue
                     v = fleet[j]
                     di, dl = self.client_data[parts[j]]
@@ -447,8 +516,8 @@ class GenFVRunner:
                                     self.server.params, self.cnn_cfg,
                                     jnp.asarray(bi), jnp.asarray(bl),
                                     cfg.local_steps, CLIENT_LR, prox_mu)
-                                self.stale.push(StaleEntry(
-                                    m, v.data_size, v.emd, t, v.vid))
+                                late_sink(StaleEntry(
+                                    m, v.data_size, v.emd, t, v.vid), pos)
                             continue
                         if is_poisoned:
                             # NaN batches corrupt the update inside the fused
@@ -469,12 +538,12 @@ class GenFVRunner:
                         if is_late:
                             late += 1
                             if tree_finite(m):
-                                self.stale.push(StaleEntry(
-                                    m, v.data_size, v.emd, t, v.vid))
+                                late_sink(StaleEntry(
+                                    m, v.data_size, v.emd, t, v.vid), pos)
                             else:
                                 rejected += 1
                             continue
-                        if spec is not None and not tree_finite(m):
+                        if guard_host and not tree_finite(m):
                             # host-side guard (reference path): the vehicle
                             # still counts as a participant (it trained and
                             # uploaded; mirrors the in-kernel guard's
@@ -491,19 +560,11 @@ class GenFVRunner:
                     memds.append(v.emd)
             n_trained = len(msizes)
 
-            # staleness-discounted weights: rho_eff ∝ |D_n| * gamma^age,
-            # normalized jointly with the fresh participants (fl/faults.py)
-            s_models = [e.params for e in stale_entries]
-            s_sizes = [e.size * spec.staleness_discount ** a
-                       for e, a in zip(stale_entries, stale_ages)]
-            s_emds = [e.emd for e in stale_entries]
-            stale_merged = len(stale_entries)
-
             # span key mirrors the fused dispatch's jit cache key — the
             # padded fleet bucket and the finiteness-guard flag select the
             # compiled XLA program (fl/fleet.py)
             agg_bucket = bucket_size(len(bimgs)) if bimgs else 0
-            agg_guard = bool(spec is not None and n_poison)
+            agg_guard = bool(n_poison)
             agg_key = ((agg_bucket, agg_guard)
                        if run.vectorized and bimgs else None)
             if self.obs.enabled and run.vectorized and bimgs:
@@ -514,7 +575,7 @@ class GenFVRunner:
                                guard=int(agg_guard),
                                stale=stale_merged) as sp:
                 if run.vectorized and bimgs:
-                    if spec is not None and (n_poison or s_models):
+                    if n_poison or stale_models:
                         # recovery dispatch: joint fresh+stale weights, and
                         # the guarded kernel IFF a poisoned batch is actually
                         # inside it. The guard is numerically neutral on
@@ -522,16 +583,17 @@ class GenFVRunner:
                         # program (ULP-level drift in the vmapped SGD), so
                         # clean rounds must keep dispatching the seed's
                         # kernel to stay bitwise.
-                        all_sizes = np.asarray(list(msizes) + s_sizes,
-                                               np.float64)
+                        all_sizes = np.asarray(
+                            list(msizes) + list(stale_weights), np.float64)
                         rho_all = all_sizes / max(all_sizes.sum(), 1.0)
-                        emds_all = memds + s_emds
+                        emds_all = memds + stale_emds
                         out = self.server.fleet_round(
                             self.engine, bimgs, blabels, msizes, memds,
                             aug if use_aigc else None, prox_mu,
                             guard=bool(n_poison),
-                            rhos=rho_all[:len(msizes)] if s_models else None,
-                            kappa_emds=emds_all if s_models else None)
+                            rhos=(rho_all[:len(msizes)]
+                                  if stale_models else None),
+                            kappa_emds=emds_all if stale_models else None)
                         if n_poison:
                             _, (k1, k2), losses, finite = out
                             rejected += int((~finite).sum())
@@ -540,17 +602,17 @@ class GenFVRunner:
                         else:
                             _, (k1, k2), losses = out
                             loss = float(losses.mean())
-                        if s_models:
+                        if stale_models:
                             w = (k1 * rho_all[len(msizes):]).tolist()
                             self.server.params = add_weighted(
-                                self.server.params, s_models, w)
+                                self.server.params, stale_models, w)
                     else:
                         _, (k1, k2), losses = self.server.fleet_round(
                             self.engine, bimgs, blabels, msizes, memds,
                             aug if use_aigc else None, prox_mu)
                         loss = float(losses.mean())
                 else:
-                    if spec is not None and not models and not s_models \
+                    if guard_host and not models and not stale_models \
                             and msizes:
                         # every upload rejected: the federated mass degrades
                         # to the round-start global (no federated progress),
@@ -561,8 +623,9 @@ class GenFVRunner:
                     # weights); the kappa2 EMD pool spans every participant,
                     # matching the vectorized kernel's accounting
                     _, (k1, k2) = self.server.aggregate(
-                        models + s_models, list(fsizes) + s_sizes,
-                        memds + s_emds, aug if use_aigc else None)
+                        models + stale_models,
+                        list(fsizes) + list(stale_weights),
+                        memds + stale_emds, aug if use_aigc else None)
                     loss = loss / max(len(models), 1)
                 sp.sync = self.server.params
 
@@ -585,7 +648,8 @@ class GenFVRunner:
                     # untouched)
                     self.world.remove(forced_out)
                 t_rsu = plan.t_rsu if use_aigc else 0.0
-                dt = max(t_round, t_rsu) if plan.selected else cfg.t_max
+                dt = max(t_round, t_rsu, dt_floor) if plan.selected \
+                    else max(cfg.t_max, dt_floor)
                 self.world.step(self.rng, float(
                     np.clip(dt, 0.25 * cfg.t_max, cfg.t_max)))
 
@@ -595,7 +659,7 @@ class GenFVRunner:
                                    self.test_labels))
         log = RoundLog(t, n_trained, plan.t_bar, plan.b_gen, k2,
                        emd_bar, float(loss), acc, dropped, late, rejected,
-                       stale_merged, float(t_round),
+                       stale_merged, stale_dropped, float(t_round),
                        bcd_iters=plan.bcd_iters,
                        planner_converged=int(plan.converged))
         self._record_round(log)
@@ -623,6 +687,7 @@ class GenFVRunner:
         obs.count("faults/late", log.late)
         obs.count("faults/rejected", log.rejected)
         obs.count("faults/stale_merged", log.stale_merged)
+        obs.count("faults/stale_dropped", log.stale_dropped)
         obs.count("faults/dropped", log.dropped)
         if self.world is not None:
             self.world.observe(obs)
@@ -672,8 +737,8 @@ class GenFVRunner:
     # (tests/test_faults.py golden resume, both planner backends).
     # ------------------------------------------------------------------
     _LOG_INT_FIELDS = ("round", "selected", "b_gen", "dropped", "late",
-                       "rejected", "stale_merged", "bcd_iters",
-                       "planner_converged")
+                       "rejected", "stale_merged", "stale_dropped",
+                       "bcd_iters", "planner_converged")
 
     def _logs_state(self) -> dict:
         return {f.name: np.asarray([getattr(l, f.name) for l in self.logs],
@@ -681,11 +746,13 @@ class GenFVRunner:
                                    else np.float64)
                 for f in dataclasses.fields(RoundLog)}
 
-    def save_checkpoint(self, path: str) -> str:
-        """Atomic snapshot of all mutable round state (repro.checkpoint)."""
+    def _checkpoint_state(self) -> dict:
+        """The runner's complete mutable state as a checkpointable tree.
+        `StreamEngine.save_checkpoint` reuses this and appends its own
+        event-queue block under a key the sync layout never uses."""
         rng_state = np.frombuffer(
             json.dumps(self.rng.bit_generator.state).encode(), np.uint8)
-        state = {
+        return {
             "rng": rng_state.copy(),
             "b_prev": np.int64(self.b_prev),
             "next_round": np.int64(self.next_round),
@@ -713,15 +780,14 @@ class GenFVRunner:
                                   np.int64),
             }),
         }
+
+    def save_checkpoint(self, path: str) -> str:
+        """Atomic snapshot of all mutable round state (repro.checkpoint)."""
         meta = {"schema": self.CKPT_SCHEMA,
                 "run": run_payload(self.run)}
-        return save_tree(path, state, metadata=meta)
+        return save_tree(path, self._checkpoint_state(), metadata=meta)
 
-    def load_checkpoint(self, path: str) -> int:
-        """Restore a `save_checkpoint` snapshot into this (freshly
-        constructed, identically configured) runner. Returns the next round
-        to execute; `train()` continues from there."""
-        meta = read_manifest(path)["metadata"]
+    def _check_manifest(self, meta: dict) -> None:
         if meta.get("schema") != self.CKPT_SCHEMA:
             raise ValueError(f"checkpoint schema {meta.get('schema')!r} != "
                              f"{self.CKPT_SCHEMA!r}")
@@ -729,8 +795,22 @@ class GenFVRunner:
             raise ValueError(
                 "checkpoint was written by a different RunConfig: "
                 f"{meta.get('run')} vs {run_payload(self.run)}")
-        state = restore_tree(path)
 
+    def load_checkpoint(self, path: str) -> int:
+        """Restore a `save_checkpoint` snapshot into this (freshly
+        constructed, identically configured) runner. Returns the next round
+        to execute; `train()` continues from there."""
+        meta = read_manifest(path)["metadata"]
+        self._check_manifest(meta)
+        if "stream_cfg" in meta:
+            raise ValueError(
+                "checkpoint was written by a streaming engine (it carries "
+                "in-flight upload state); load it with "
+                "repro.fl.stream.StreamEngine.load_checkpoint")
+        self._restore_state(restore_tree(path))
+        return self.next_round
+
+    def _restore_state(self, state: dict) -> None:
         self.rng.bit_generator.state = json.loads(
             bytes(np.asarray(state["rng"], np.uint8)).decode())
         self.b_prev = int(state["b_prev"])
@@ -782,4 +862,3 @@ class GenFVRunner:
                     emd=float(stale["emd"][i]),
                     trained_round=int(stale["trained_round"][i]),
                     vid=int(stale["vid"][i])))
-        return self.next_round

@@ -4,6 +4,8 @@ from __future__ import annotations
 
 from typing import List, Sequence
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core.emd import aggregate, data_weights, kappas, mean_emd
@@ -68,6 +70,22 @@ class GenFVServer:
         self.params, losses = engine.run(self.params, imgs_list, labels_list,
                                          rhos, emd_bar, aug_model, prox_mu)
         return self.params, kappas(emd_bar), losses
+
+    # ---- async merge-on-arrival (repro.fl.stream) -------------------------
+    def absorb(self, model, weight: float):
+        """Fold one late-arriving update into the global between rounds:
+        params <- (1-w)*params + w*model. The streaming engine calls this
+        for uploads that land in the gap after their round committed, with
+        `weight` already carrying the rho·gamma^age staleness discount —
+        the same first-order mass a next-round `add_weighted` merge would
+        have granted the update, applied at its arrival instant instead.
+        Float32 accumulation, matching `add_weighted`."""
+        w = float(weight)
+        self.params = jax.tree.map(
+            lambda p, m: ((1.0 - w) * p.astype(jnp.float32)
+                          + w * m.astype(jnp.float32)).astype(p.dtype),
+            self.params, model)
+        return self.params
 
     # ---- aggregation (eq. 4) ----------------------------------------------
     def aggregate(self, vehicle_models: List, sizes: Sequence[int],

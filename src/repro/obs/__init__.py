@@ -24,11 +24,11 @@ from repro.obs.sinks import (BENCH_SCHEMA, METRICS_SCHEMA, host_meta,
                              list_metrics_artifacts, load_metrics_artifact,
                              save_metrics_artifact)
 from repro.obs.trace import (NULL_OBS, NullObs, Obs, ProgressLogger, Span,
-                             Stopwatch, log_line, stopwatch)
+                             Stopwatch, VirtualClock, log_line, stopwatch)
 
 __all__ = [
     "BENCH_SCHEMA", "METRICS_SCHEMA", "MetricsRegistry", "NULL_OBS",
-    "NullObs", "Obs", "ProgressLogger", "Span", "Stopwatch", "host_meta",
-    "list_metrics_artifacts", "load_metrics_artifact", "log_line",
-    "save_metrics_artifact", "stopwatch",
+    "NullObs", "Obs", "ProgressLogger", "Span", "Stopwatch", "VirtualClock",
+    "host_meta", "list_metrics_artifacts", "load_metrics_artifact",
+    "log_line", "save_metrics_artifact", "stopwatch",
 ]

@@ -29,7 +29,32 @@ import time
 from typing import Any, Callable, Dict, List, Optional
 
 __all__ = ["NULL_OBS", "NullObs", "Obs", "ProgressLogger", "Span",
-           "Stopwatch", "log_line", "stopwatch"]
+           "Stopwatch", "VirtualClock", "log_line", "stopwatch"]
+
+
+# ---------------------------------------------------------------------------
+# Deterministic virtual wall-clock.
+# ---------------------------------------------------------------------------
+class VirtualClock:
+    """An explicitly-advanced time source: calling it reads the current
+    virtual time, `advance(dt)` moves it forward. Drop-in for the `clock`
+    parameter of `Obs`/`Stopwatch`, and the simulation clock of
+    `repro.fl.stream.StreamEngine` — the streaming round loop never reads
+    `time.time()`/`time.monotonic()` (tests/test_obs.py lints for it), so
+    same (seed, schedule) replays the identical event order anywhere."""
+    __slots__ = ("t",)
+
+    def __init__(self, t0: float = 0.0):
+        self.t = float(t0)
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> float:
+        if dt < 0.0:
+            raise ValueError(f"virtual clock cannot run backwards (dt={dt})")
+        self.t += float(dt)
+        return self.t
 
 
 # ---------------------------------------------------------------------------

@@ -37,6 +37,12 @@ class Request:
     max_new_tokens: int = 16
     out: List[int] = field(default_factory=list)
     done: bool = False
+    # per-request decode-tick deadline (None = engine default). A request
+    # whose decode never terminates would otherwise own its slot forever
+    # and starve every later admission; past the deadline it is evicted
+    # (done=True, evicted=True) and the slot freed.
+    deadline_ticks: Optional[int] = None
+    evicted: bool = False
 
 
 def _merge_lane(cache, lane_cache, row: int):
@@ -61,11 +67,15 @@ def _merge_lane(cache, lane_cache, row: int):
 
 class ServeEngine:
     def __init__(self, cfg, params, *, slots: int = 4, max_len: int = 512,
-                 impl: str = "jnp", dtype=jnp.float32, obs=None):
+                 impl: str = "jnp", dtype=jnp.float32, obs=None,
+                 deadline_ticks: int | None = None):
         self.cfg = cfg
         self.params = params
         self.slots = slots
         self.max_len = max_len
+        # default per-request eviction deadline; None = bounded only by
+        # max_new_tokens/max_len (the pre-eviction behavior)
+        self.deadline_ticks = deadline_ticks
         # repro.obs tracer: serve/prefill and serve/decode spans + queue
         # counters; NULL_OBS keeps the hot tick loop allocation-free
         self.obs = obs if obs is not None else NULL_OBS
@@ -75,6 +85,7 @@ class ServeEngine:
         self.active: Dict[int, Request] = {}      # slot -> request
         self.positions = np.zeros(slots, np.int64)
         self.last_tok = np.zeros(slots, np.int64)
+        self.slot_ticks = np.zeros(slots, np.int64)  # decode ticks in slot
         self.waiting: List[Request] = []
         self._lane_cache_template = api.init_cache(cfg, 1, max_len, dtype)
 
@@ -102,6 +113,7 @@ class ServeEngine:
             self.active[slot] = req
             self.positions[slot] = len(req.prompt)
             self.last_tok[slot] = tok
+            self.slot_ticks[slot] = 0
             self.obs.count("serve/admitted")
 
     # ------------------------------------------------------------------
@@ -125,11 +137,23 @@ class ServeEngine:
             req.out.append(tok)
             self.positions[slot] += 1
             self.last_tok[slot] = tok
+            self.slot_ticks[slot] += 1
             if (len(req.out) >= req.max_new_tokens
                     or self.positions[slot] >= self.max_len - 1):
                 req.done = True
                 finished.append(req)
                 del self.active[slot]
+                continue
+            # max-ticks eviction: a stuck decode frees its slot so later
+            # admissions proceed instead of queueing forever
+            deadline = req.deadline_ticks if req.deadline_ticks is not None \
+                else self.deadline_ticks
+            if deadline is not None and self.slot_ticks[slot] >= deadline:
+                req.done = True
+                req.evicted = True
+                finished.append(req)
+                del self.active[slot]
+                self.obs.count("serve/evicted")
         return finished
 
     def run(self, max_ticks: int = 1000) -> List[Request]:

@@ -17,8 +17,9 @@ from repro.configs.base import GenFVConfig
 from repro.core.emd import aggregate_stacked, aggregate_stacked_guarded, \
     tree_finite
 from repro.exp import ExperimentSpec, Sweep
-from repro.fl.faults import (FaultInjector, FaultSpec, StaleBuffer,
-                             StaleEntry, fault_names, get_fault,
+from repro.fl.faults import (FaultInjector, FaultSpec, RoundFaults,
+                             StaleBuffer, StaleEntry, fault_names, get_fault,
+                             realized_arrivals, realized_times,
                              register_fault)
 from repro.fl.rounds import GenFVRunner, RunConfig
 
@@ -109,16 +110,113 @@ def test_injector_benign_cases():
     assert inj.draw(5, 6).departed.all()           # active round
 
 
+def test_realization_edge_cases():
+    """k=0 and inactive-round paths through both realization functions."""
+    from types import SimpleNamespace
+    spec = FaultSpec(seed=2, start_round=5, outage_prob=1.0)
+    inj = FaultInjector(spec)
+    # k=0: every array is empty, no stream is touched
+    rf0 = inj.draw(7, 0)
+    plan0 = SimpleNamespace(selected=[], t_cp=np.zeros(0), t_mu=np.zeros(0),
+                            l=np.zeros(0), phi=np.zeros(0))
+    t0 = realized_times(FAST_CFG, [], plan0, 1e6, rf0, spec.outage_fade_db)
+    a0, r0, x0 = realized_arrivals(FAST_CFG, [], plan0, 1e6, rf0, spec, 7,
+                                   retry_budget=2, backoff_s=0.1,
+                                   backoff_cap_s=1.0)
+    assert t0.shape == a0.shape == r0.shape == x0.shape == (0,)
+    # inactive round: benign draw => arrivals are exactly the nominal
+    # t_cp + t_mu, no retries, nobody exhausted
+    rf = inj.draw(0, 3)          # before start_round
+    assert rf.any is False
+    plan = SimpleNamespace(selected=[0, 1, 2],
+                           t_cp=np.array([1.0, 2.0, 3.0]),
+                           t_mu=np.array([0.5, 0.5, 0.5]),
+                           l=np.ones(3), phi=np.ones(3))
+    times, retries, exhausted = realized_arrivals(
+        FAST_CFG, [], plan, 1e6, rf, spec, 0, retry_budget=2,
+        backoff_s=0.1, backoff_cap_s=1.0)
+    np.testing.assert_array_equal(times, np.array([1.5, 2.5, 3.5]))
+    assert not retries.any() and not exhausted.any()
+    np.testing.assert_array_equal(
+        realized_times(FAST_CFG, [], plan, 1e6, rf, spec.outage_fade_db),
+        times)
+
+
+def test_outage_departed_overlap_never_retries():
+    """A departed vehicle's retry must never be scheduled — its update can
+    never arrive, whatever the outage realization says."""
+    run = RunConfig(seed=3, **FAST)
+    r = GenFVRunner(run, FAST_CFG)
+    p = r.begin_round(0)
+    plan = r.plan(p)
+    k = len(plan.selected)
+    assert k >= 2
+    spec = FaultSpec(seed=1, outage_prob=1.0)   # no retry ever recovers
+    dep = np.zeros(k, bool)
+    dep[0] = True
+    rf = RoundFaults(np.ones(k), np.ones(k, bool), dep, np.zeros(k, bool))
+    times, retries, exhausted = realized_arrivals(
+        r.cfg, p.fleet, plan, r.model_bits, rf, spec, 0,
+        retry_budget=3, backoff_s=0.1, backoff_cap_s=0.5)
+    # departed ∧ outage: no retry scheduled, not "exhausted" — just gone
+    assert np.isinf(times[0]) and retries[0] == 0 and not exhausted[0]
+    # pure outage at outage_prob=1: burns the whole budget, then exhausts
+    assert np.isinf(times[1:]).all()
+    assert (retries[1:] == 3).all() and exhausted[1:].all()
+    # with recovery certain (outage_prob=0 means every retry draw clears),
+    # one backoff + the nominally-priced upload lands a finite arrival
+    spec_ok = FaultSpec(seed=1, outage_prob=0.0)
+    rf1 = RoundFaults(np.ones(k), np.eye(1, k, 1, dtype=bool)[0],
+                      np.zeros(k, bool), np.zeros(k, bool))
+    t1, r1, x1 = realized_arrivals(
+        r.cfg, p.fleet, plan, r.model_bits, rf1, spec_ok, 0,
+        retry_budget=3, backoff_s=0.1, backoff_cap_s=0.5)
+    nominal = np.asarray(plan.t_cp) + np.asarray(plan.t_mu)
+    assert np.isfinite(t1[1]) and t1[1] > nominal[1] and r1[1] == 1
+    assert not x1.any()
+
+
+def test_stale_dropped_reaches_round_ledger():
+    """Updates aged past max_staleness surface in RoundLog.stale_dropped
+    instead of vanishing silently."""
+    spec = FaultSpec(seed=11, straggler_prob=1.0, straggler_slowdown=50.0,
+                     deadline_slack=0.0, max_staleness=0)
+    run = RunConfig(seed=0, **FAST)
+    res = GenFVRunner(run, FAST_CFG, faults=spec).train()
+    late = sum(l.late for l in res.logs)
+    dropped = sum(l.stale_dropped for l in res.logs)
+    merged = sum(l.stale_merged for l in res.logs)
+    assert late > 0
+    # max_staleness=0: nothing buffered at round t survives to t+1
+    assert merged == 0 and dropped > 0
+
+
 def test_stale_buffer_ages_and_drop():
     buf = StaleBuffer()
     for t in (0, 1, 3):
         buf.push(StaleEntry(params=None, size=10, emd=0.5, trained_round=t,
                             vid=t))
     assert len(buf) == 3
-    merge, ages = buf.pop_mergeable(3, max_staleness=2)
-    # trained at 0 is age 3 > 2: too stale, silently dropped
+    merge, ages, dropped = buf.pop_mergeable(3, max_staleness=2)
+    # trained at 0 is age 3 > 2: too stale, dropped AND counted
     assert [e.trained_round for e in merge] == [1, 3] and ages == [2, 0]
+    assert dropped == 1
     assert len(buf) == 0                           # drained either way
+
+
+def test_stale_buffer_boundary_age_merges():
+    # age == max_staleness is inclusive: the entry still merges (dropping
+    # starts strictly beyond the bound) and the drop counter stays zero
+    buf = StaleBuffer()
+    buf.push(StaleEntry(params=None, size=10, emd=0.5, trained_round=0,
+                        vid=0))
+    merge, ages, dropped = buf.pop_mergeable(2, max_staleness=2)
+    assert len(merge) == 1 and ages == [2] and dropped == 0
+    # one past the bound: dropped, counted, nothing mergeable
+    buf.push(StaleEntry(params=None, size=10, emd=0.5, trained_round=0,
+                        vid=1))
+    merge, ages, dropped = buf.pop_mergeable(3, max_staleness=2)
+    assert merge == [] and ages == [] and dropped == 1
 
 
 # ---------------------------------------------------------------------------

@@ -457,3 +457,31 @@ def test_no_bare_print_in_library():
     assert not offenders, (
         "bare print( in library code — route it through "
         f"repro.obs.log_line / ProgressLogger instead: {offenders}")
+
+
+# ---------------------------------------------------------------------------
+# Clock-discipline lint: the FL round loop and the serving engine must run
+# on injectable clocks only (VirtualClock / the Obs clock parameter) so the
+# streaming determinism contract (fl/stream.py) can't silently regress.
+# ---------------------------------------------------------------------------
+_WALLCLOCK_RE = re.compile(r"(?<![\w.])time\.(time|monotonic)\(")
+
+
+def test_no_wall_clock_in_streaming_paths():
+    offenders = []
+    for sub in ("fl", "serve"):
+        for dirpath, dirnames, files in os.walk(os.path.join(SRC_ROOT, sub)):
+            dirnames[:] = [d for d in dirnames if d != "__pycache__"]
+            for fn in files:
+                if not fn.endswith(".py"):
+                    continue
+                path = os.path.join(dirpath, fn)
+                with open(path) as f:
+                    for i, line in enumerate(f, 1):
+                        code = line.split("#", 1)[0]
+                        if _WALLCLOCK_RE.search(code):
+                            offenders.append(
+                                f"{os.path.relpath(path, SRC_ROOT)}:{i}")
+    assert not offenders, (
+        "time.time()/time.monotonic() in a deterministic streaming path — "
+        f"inject a VirtualClock (repro.obs) instead: {offenders}")

@@ -96,3 +96,37 @@ def test_per_row_cache_cursor(model):
         # per-row cursor: trailing dim is the batch (leading dim may be the
         # scan-group stack)
         assert l.shape[-1] == 2
+
+
+def test_max_ticks_eviction_frees_slot(model):
+    """A request whose decode never reaches its budget within the deadline
+    is evicted; the freed slot serves later admissions (satellite: stuck
+    requests must not occupy slots forever)."""
+    cfg, params = model
+    eng = ServeEngine(cfg, params, slots=1, max_len=64, deadline_ticks=4)
+    stuck = Request(0, np.arange(4), max_new_tokens=1000)   # can't finish
+    nxt = Request(1, np.arange(10, 16), max_new_tokens=3)
+    eng.submit(stuck)
+    eng.submit(nxt)
+    done = eng.run(max_ticks=50)
+    assert [r.rid for r in done] == [0, 1]
+    assert stuck.done and stuck.evicted
+    # the evicted request got exactly prefill + deadline decode ticks
+    assert len(stuck.out) == 1 + 4
+    assert nxt.done and not nxt.evicted
+    assert nxt.out == _reference(cfg, params, nxt.prompt, 3)
+
+
+def test_per_request_deadline_overrides_engine_default(model):
+    cfg, params = model
+    eng = ServeEngine(cfg, params, slots=2, max_len=64, deadline_ticks=2)
+    # per-request deadline wins over the engine default in both directions
+    a = Request(0, np.arange(4), max_new_tokens=1000, deadline_ticks=5)
+    b = Request(1, np.arange(6), max_new_tokens=3)   # finishes before 2? no:
+    # 1 prefill token + 2 decode ticks == 3 tokens: completes AT the budget,
+    # so completion wins and it is not marked evicted
+    eng.submit(a)
+    eng.submit(b)
+    eng.run(max_ticks=50)
+    assert a.evicted and len(a.out) == 1 + 5
+    assert b.done and not b.evicted and len(b.out) == 3

@@ -1,0 +1,267 @@
+"""Streaming round engine (fl/stream.py): StreamConfig validation and
+RunConfig wiring, bitwise sync parity at full quorum, quorum-commit /
+degradation-ladder semantics under faults, replay + cross-planner
+determinism, mid-stream golden checkpoint resume (in-flight uploads and
+the virtual clock survive), checkpoint loader cross-refusal, no-stall
+coverage over every registered fault preset, and the bench smoke."""
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import GenFVConfig, StreamConfig
+from repro.fl.faults import FaultSpec, fault_names
+from repro.fl.rounds import GenFVRunner, RunConfig, run_payload
+from repro.fl.stream import StreamEngine
+from repro.obs import Obs, VirtualClock
+
+REPO_ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+FAST = dict(rounds=3, train_size=300, test_size=32, width_mult=0.0625)
+FAST5 = dict(rounds=5, train_size=300, test_size=32, width_mult=0.0625)
+FAST_CFG = GenFVConfig(batch_size=8, local_steps=2, num_vehicles=6)
+
+
+def _params_equal(a, b) -> bool:
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    return len(la) == len(lb) and all(
+        (np.asarray(x) == np.asarray(y)).all() for x, y in zip(la, lb))
+
+
+def _stream(run, sc=None, **kw):
+    runner = GenFVRunner(run, FAST_CFG, **kw)
+    return runner, StreamEngine(runner, sc)
+
+
+# ---------------------------------------------------------------------------
+# Config surface
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("kw,fragment", [
+    (dict(quorum=0.0), "quorum"),
+    (dict(quorum=1.5), "quorum"),
+    (dict(cadence_s=-1.0), "cadence_s"),
+    (dict(deadline_slack=-0.1), "deadline_slack"),
+    (dict(retry_budget=-1), "retry_budget"),
+    (dict(retry_backoff_s=0.0), "retry_backoff_s"),
+    (dict(retry_backoff_cap_s=0.1), "retry_backoff_cap_s"),
+    (dict(staleness_discount=0.0), "staleness_discount"),
+    (dict(max_staleness=-1), "max_staleness"),
+])
+def test_stream_config_validation(kw, fragment):
+    with pytest.raises(ValueError, match=fragment):
+        StreamConfig(**kw)
+
+
+def test_stream_config_payload_roundtrip():
+    sc = StreamConfig(quorum=0.6, cadence_s=2.0, retry_budget=3)
+    assert StreamConfig.from_payload(sc.to_payload()) == sc
+
+
+def test_runconfig_stream_coercion_and_payload():
+    # a plain dict (JSON payload) coerces to StreamConfig at construction
+    run = RunConfig(stream={"quorum": 0.5, "retry_budget": 1}, **FAST)
+    assert isinstance(run.stream, StreamConfig)
+    assert run.stream.quorum == 0.5 and run.stream.retry_budget == 1
+    # run_payload flattens it back out and the round-trip is exact
+    rp = run_payload(run)
+    assert isinstance(rp["stream"], dict)
+    assert RunConfig(**rp) == run
+    assert run_payload(RunConfig(**rp)) == rp
+    # None stays None
+    assert run_payload(RunConfig(**FAST))["stream"] is None
+
+
+def test_virtual_clock():
+    clk = VirtualClock(2.0)
+    assert clk() == 2.0
+    assert clk.advance(1.5) == 3.5
+    with pytest.raises(ValueError, match="backwards"):
+        clk.advance(-0.1)
+
+
+def test_engine_rejects_unstreamable_configs():
+    with pytest.raises(ValueError, match="vectorized"):
+        _stream(RunConfig(vectorized=False, **FAST))
+    with pytest.raises(ValueError, match="aigc_only"):
+        _stream(RunConfig(strategy="aigc_only", **FAST))
+
+
+# ---------------------------------------------------------------------------
+# Sync parity: full quorum, no faults, cadence off => bitwise-equal to the
+# synchronous GenFVRunner loop (same RoundLogs, same final params).
+# ---------------------------------------------------------------------------
+def test_clean_full_quorum_is_bitwise_sync():
+    run = RunConfig(seed=0, **FAST)
+    sync = GenFVRunner(run, FAST_CFG)
+    res_sync = sync.train()
+    runner, eng = _stream(run)          # defaults: quorum=1.0, cadence=0
+    res_stream = eng.run()
+    assert res_sync.logs == res_stream.logs
+    assert _params_equal(sync.server.params, runner.server.params)
+    # every commit is a healthy rung-0 quorum landing exactly on t_bar
+    assert all(s.rung == 0 for s in eng.slogs)
+    for s, l in zip(eng.slogs, res_sync.logs):
+        assert s.t_commit - s.t_start == pytest.approx(l.t_round)
+
+
+def test_quorum_commits_early_and_merges_late_arrivals():
+    run = RunConfig(seed=0, **FAST5)
+    runner, eng = _stream(run, StreamConfig(quorum=0.4))
+    res = eng.run()
+    ks = [l.selected + l.dropped + l.late for l in res.logs]
+    # the quorum commit fires strictly before the straggler window when
+    # q < K arrivals suffice
+    early = [s for s, l, k in zip(eng.slogs, res.logs, ks)
+             if k and s.quorum_target < k]
+    assert early and all(s.rung == 0 for s in eng.slogs)
+    assert any(s.t_commit - s.t_start < l.t_bar - 1e-12
+               for s, l in zip(eng.slogs, res.logs) if l.t_bar > 0)
+    # post-commit uploads are not lost: they re-enter as in-flight merges
+    late_total = sum(s.late for s in eng.slogs)
+    landed = sum(s.merged_inflight + s.gap_merged for s in eng.slogs) \
+        + len(eng.inflight) + sum(s.stale_dropped for s in eng.slogs)
+    assert late_total > 0 and landed == late_total
+
+
+# ---------------------------------------------------------------------------
+# Determinism: replay + cross-planner parity with faults and retries live.
+# ---------------------------------------------------------------------------
+def _churn_run(planner):
+    run = RunConfig(seed=0, planner=planner, faults="rush_hour_deep_fade",
+                    **FAST5)
+    runner, eng = _stream(run, StreamConfig(quorum=0.6, cadence_s=0.1,
+                                            retry_budget=2))
+    return runner, eng, eng.run()
+
+
+def test_streaming_replay_determinism():
+    _, e1, r1 = _churn_run("jax")
+    _, e2, r2 = _churn_run("jax")
+    assert r1.logs == r2.logs
+    assert e1.slogs == e2.slogs
+    assert [(f.due, f.seq, f.vid) for f in e1.inflight] == \
+        [(f.due, f.seq, f.vid) for f in e2.inflight]
+
+
+def test_cross_planner_commit_and_params_parity():
+    rj, ej, resj = _churn_run("jax")
+    rn, en, resn = _churn_run("numpy")
+    assert ej.slogs == en.slogs          # identical commit sequence
+    assert resj.logs == resn.logs
+    assert _params_equal(rj.server.params, rn.server.params)
+    # the schedule actually exercised the machinery under test
+    assert sum(s.retries for s in ej.slogs) > 0
+    assert any(s.rung > 0 for s in ej.slogs)
+    assert sum(s.merged_inflight + s.gap_merged for s in ej.slogs) > 0
+
+
+# ---------------------------------------------------------------------------
+# Mid-stream golden resume: in-flight uploads, the event queue and the
+# virtual clock all survive a checkpoint bitwise.
+# ---------------------------------------------------------------------------
+def test_midstream_checkpoint_resume_golden(tmp_path):
+    run = RunConfig(seed=0, faults="rush_hour_deep_fade", **FAST5)
+    sc = StreamConfig(quorum=0.6, cadence_s=0.1, retry_budget=2)
+    r_full, e_full = _stream(run, sc)
+    res_full = e_full.run()
+
+    r_head, e_head = _stream(run, sc)
+    for t in range(3):
+        e_head.run_round(t)
+    assert e_head.inflight          # the checkpoint carries live uploads
+    path = e_head.save_checkpoint(str(tmp_path / "stream_ck"))
+
+    r_res, e_res = _stream(run, sc)
+    assert e_res.load_checkpoint(path) == 3
+    assert e_res.now == e_head.now
+    assert [(f.due, f.seq, f.vid, f.round) for f in e_res.inflight] == \
+        [(f.due, f.seq, f.vid, f.round) for f in e_head.inflight]
+    res_res = e_res.run()
+    assert res_full.logs == res_res.logs
+    assert e_full.slogs == e_res.slogs
+    assert _params_equal(r_full.server.params, r_res.server.params)
+
+
+def test_checkpoint_loader_cross_refusal(tmp_path):
+    run = RunConfig(seed=0, **FAST)
+    # streaming checkpoint refused by the synchronous loader
+    r1, e1 = _stream(run)
+    e1.run_round(0)
+    spath = e1.save_checkpoint(str(tmp_path / "s"))
+    r2 = GenFVRunner(run, FAST_CFG)
+    with pytest.raises(ValueError, match="streaming engine"):
+        r2.load_checkpoint(spath)
+    # synchronous checkpoint refused by the streaming loader
+    r3 = GenFVRunner(run, FAST_CFG)
+    r3.run_round(0)
+    kpath = r3.save_checkpoint(str(tmp_path / "k"))
+    _, e4 = _stream(run)
+    with pytest.raises(ValueError, match="synchronous runner"):
+        e4.load_checkpoint(kpath)
+    # a different streaming policy is a different run
+    _, e5 = _stream(run, StreamConfig(quorum=0.5))
+    with pytest.raises(ValueError, match="different streaming policy"):
+        e5.load_checkpoint(spath)
+
+
+# ---------------------------------------------------------------------------
+# Liveness: no hang or round stall at any registered fault preset, and the
+# ladder + ledger stay coherent.
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("preset", sorted(fault_names()))
+def test_no_stall_under_any_preset(preset):
+    run = RunConfig(seed=0, faults=preset, **FAST)
+    runner, eng = _stream(run, StreamConfig(quorum=0.6, retry_budget=1))
+    res = eng.run()
+    assert len(res.logs) == FAST["rounds"]          # every round committed
+    starts = [s.t_start for s in eng.slogs]
+    assert all(b > a for a, b in zip(starts, starts[1:]))   # clock advances
+    assert eng.now > starts[-1]
+    for s in eng.slogs:
+        assert 0 <= s.rung <= 3
+        assert s.t_commit >= s.t_start
+        assert s.arrived >= (1 if s.rung in (0, 1, 2) and s.quorum_target
+                             else 0)
+
+
+def test_stream_ledger_reaches_obs():
+    obs = Obs(clock=VirtualClock())
+    run = RunConfig(seed=0, faults="rush_hour_deep_fade", obs=obs, **FAST)
+    runner, eng = _stream(run, StreamConfig(quorum=0.6))
+    eng.run()
+    m = obs.metrics
+    assert m.counter_value("stream/rounds") == FAST["rounds"]
+    assert m.counter_value("stream/retries") == \
+        sum(s.retries for s in eng.slogs)
+    assert m.gauge_value("stream/inflight") == len(eng.inflight)
+    names = {e["name"] for e in obs.events}
+    assert {"stream/tick", "stream/retry", "stream/commit"} <= names
+
+
+# ---------------------------------------------------------------------------
+# Bench smoke (tier-1 wiring, mirroring bench_faults --quick)
+# ---------------------------------------------------------------------------
+def test_bench_stream_quick_smoke(tmp_path):
+    out = tmp_path / "BENCH_stream.json"
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO_ROOT, "src") + os.pathsep + \
+        env.get("PYTHONPATH", "")
+    r = subprocess.run(
+        [sys.executable, "-m", "benchmarks.bench_stream", "--quick",
+         "--out", str(out)],
+        cwd=REPO_ROOT, env=env, capture_output=True, text=True, timeout=540)
+    assert r.returncode == 0, r.stderr[-2000:]
+    data = json.loads(out.read_text())
+    assert data["quick"] is True
+    assert data["deterministic"] is True
+    names = [row["faults"] for row in data["pairs"]]
+    assert "platoon_mass_dropout" in names and "rush_hour_deep_fade" in names
+    for row in data["pairs"]:
+        assert row["rounds_per_hour_stream"] > 0
+        assert row["rounds_per_hour_sync"] > 0
+        assert len(row["rungs"]) == 4 and sum(row["rungs"]) == row["rounds"]
+        assert 0.0 <= row["acc_stream"] <= 1.0
