@@ -10,10 +10,11 @@ import sys
 import traceback
 
 from benchmarks.common import stopwatch
-from benchmarks import (bench_faults, bench_planner, bench_rounds,
-                        bench_stream, bench_sweep, bench_world, fig5_emd,
-                        fig6_selection, fig7_power, fig8_subproblems,
-                        fig9_generation, fig10_noniid, roofline, theorem1)
+from benchmarks import (bench_faults, bench_gen, bench_planner,
+                        bench_rounds, bench_stream, bench_sweep,
+                        bench_world, fig5_emd, fig6_selection, fig7_power,
+                        fig8_subproblems, fig9_generation, fig10_noniid,
+                        roofline, theorem1)
 
 MODULES = {
     "fig5": fig5_emd.run,
@@ -30,6 +31,7 @@ MODULES = {
     "sweep": bench_sweep.run,            # repro.exp grid; full: -m benchmarks.bench_sweep
     "faults": bench_faults.run,          # fault schedules; full: -m benchmarks.bench_faults
     "stream": bench_stream.run,          # quorum streaming; full: -m benchmarks.bench_stream
+    "gen": bench_gen.run,                # AIGC dataplane; full: -m benchmarks.bench_gen
 }
 
 # FL-training-heavy modules skipped under --quick (the `sweep` smoke still

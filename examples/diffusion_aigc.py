@@ -1,72 +1,76 @@
-"""AIGC service demo (paper Sec. III-B): train the class-conditional DDPM on
-a reference pool, then plug it into the GenFV server as the generator —
-the full diffusion path instead of the fast oracle.
+"""AIGC dataplane demo (paper Sec. III-B): the real diffusion service
+behind ``RunConfig(generator="ddpm")`` — pretrained class-conditional DDPM,
+one bucketed sampling dispatch per round, measured per-image latency priced
+into eq. 48's schedule, and ``sampler_steps`` as a sweep axis.
 
-  PYTHONPATH=src python examples/diffusion_aigc.py [--train-steps 150]
+  PYTHONPATH=src python examples/diffusion_aigc.py [--rounds 2]
+
+The first run pretrains the reference-pool generator (cached under
+--ckpt-dir afterwards) and calibrates t0 into artifacts/gen_calib.json;
+reruns restore both.
 """
 import sys, os
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import argparse
-import time
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import GenFVConfig
-from repro.data.synthetic import make_image_dataset
-from repro.diffusion import DDPM, ddpm_loss, ddpm_sample, make_ddpm
 from repro.exp import ExperimentSpec, Sweep
-from repro.fl.generator import DDPMGenerator
 from repro.fl.rounds import RunConfig
+from repro.gen import (calibrated_service, gen_round_key, pretrain_ddpm,
+                       runner_ddpm, sample_schedule)
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--train-steps", type=int, default=150)
     ap.add_argument("--rounds", type=int, default=2)
+    ap.add_argument("--ckpt-dir", default="artifacts")
     args = ap.parse_args()
 
-    ddpm = DDPM(timesteps=50, num_classes=10, base_width=16)
-    params = make_ddpm(jax.random.PRNGKey(0), ddpm)
-    imgs, labels = make_image_dataset("cifar10", 512, seed=0, noise=0.15)
-    imgs, labels = jnp.asarray(imgs), jnp.asarray(labels)
+    # 1. the RSU foundation model: pretrain (or restore) the generator the
+    #    runner itself serves, on the same budget, checkpointed via
+    #    repro.checkpoint
+    ddpm = runner_ddpm(num_classes=10)
+    params, losses = pretrain_ddpm(
+        ddpm, ckpt_path=os.path.join(args.ckpt_dir, "ddpm_demo"))
+    if losses:
+        print(f"[pretrain] {len(losses)} steps, "
+              f"final loss {losses[-1]:.4f}")
+    else:
+        print("[pretrain] restored from checkpoint")
 
-    @jax.jit
-    def step(p, k, bi, bl):
-        loss, g = jax.value_and_grad(ddpm_loss, argnums=0)(p, ddpm, k, bi, bl)
-        return jax.tree.map(lambda w, gg: w - 2e-4 * gg, p, g), loss
+    # 2. sample one round schedule directly: round-keyed stream, bucketed
+    #    batched dispatch (the exact path the server takes)
+    imgs = sample_schedule(params, ddpm, gen_round_key(seed=0, round_idx=0),
+                           labels=np.arange(10) % 10, sampler_steps=10)
+    print(f"[sample] {imgs.shape} in [-1,1]: min={imgs.min():.2f} "
+          f"max={imgs.max():.2f}")
 
-    rng = np.random.default_rng(0)
-    k = jax.random.PRNGKey(1)
-    t0 = time.time()
-    for s in range(args.train_steps):
-        ix = rng.integers(0, len(labels), 32)
-        k, ks = jax.random.split(k)
-        params, loss = step(params, ks, imgs[ix], labels[ix])
-        if s % 25 == 0 or s == args.train_steps - 1:
-            print(f"[ddpm] step {s:4d} loss {float(loss):.4f} "
-                  f"({(time.time() - t0):.0f}s)")
+    # 3. measured per-image cost -> eq. 12-13 delay terms (cached in
+    #    artifacts/gen_calib.json; the runner does this implicitly)
+    svc = calibrated_service(params, ddpm, sampler_steps=10)
+    print(f"[calib] t0 = {svc.t_per_image * 1e3:.1f} ms/image "
+          f"({svc.source}, steps={svc.steps})")
 
-    samples = ddpm_sample(params, ddpm, jax.random.PRNGKey(2),
-                          np.arange(10) % 10)
-    print(f"[ddpm] sampled {samples.shape} in [-1,1]: "
-          f"min={float(samples.min()):.2f} max={float(samples.max()):.2f}")
-
-    print("\n[genfv] running rounds with the trained DDPM as the AIGC service")
-    # a one-cell repro.exp experiment; generator_factory plugs the trained
-    # DDPM in as each cell's AIGC service instead of the fast oracle
+    # 4. the round loop end to end: generator="ddpm" swaps the oracle for
+    #    this service, and sampler_steps is a first-class sweep axis — the
+    #    SUBP4 quality/cost dial
+    print("\n[genfv] sampler_steps sweep with the DDPM as the AIGC service")
     spec = ExperimentSpec(
         name="diffusion_aigc",
-        base=RunConfig(rounds=args.rounds, train_size=600, test_size=64,
-                       width_mult=0.125))
+        sampler_steps=(10, 50),
+        base=RunConfig(generator="ddpm", rounds=args.rounds, train_size=600,
+                       test_size=64, width_mult=0.125))
     result = Sweep(spec,
                    fl_cfg=GenFVConfig(batch_size=16, local_steps=2,
                                       num_vehicles=8),
-                   generator_factory=lambda cell: DDPMGenerator(params, ddpm),
                    verbose=True).run()
-    print(f"[genfv+ddpm] final accuracy {float(result.final('accuracy')[0]):.3f}")
+    for i, cell in enumerate(result.cells):
+        print(f"[genfv+ddpm] steps={cell['sampler_steps']:3d} "
+              f"final accuracy {float(result.final('accuracy')[i]):.3f} "
+              f"b_gen total {int(np.nansum(result.metrics['b_gen'][i]))}")
 
 
 if __name__ == "__main__":

@@ -1,7 +1,8 @@
 """Declarative experiment grids.
 
-An `ExperimentSpec` names the four sweep axes the paper's results actually
-vary — strategy, scenario, Dirichlet alpha, seed — plus an override-variant
+An `ExperimentSpec` names the sweep axes the paper's results actually
+vary — strategy, scenario, Dirichlet alpha, seed, and the AIGC sampler's
+step count (the SUBP4 quality/cost dial) — plus an override-variant
 axis for anything else on `RunConfig` (planner backend, model size, ...).
 `expand()` returns one frozen, registry-validated `RunConfig` per grid cell
 in a deterministic order; validation runs eagerly at spec construction, so
@@ -24,7 +25,8 @@ SPEC_SCHEMA = "repro.exp/spec/v1"
 
 #: RunConfig fields owned by the grid axes — overriding them per-variant
 #: would make a cell's coordinates ambiguous.
-_AXIS_FIELDS = frozenset({"strategy", "scenario", "alpha", "seed"})
+_AXIS_FIELDS = frozenset({"strategy", "scenario", "alpha", "seed",
+                          "sampler_steps"})
 #: "obs" is execution machinery (attach a tracer via Sweep(obs=...) or the
 #: runner, not through a serialized spec): not a valid override.
 _RUN_FIELDS = frozenset(
@@ -72,13 +74,15 @@ class Cell:
     scenario: str
     alpha: float
     seed: int
+    sampler_steps: int
     variant: int                       # index into spec.overrides
     run: RunConfig
 
     def coords(self) -> Dict[str, Any]:
         return {"index": self.index, "strategy": self.strategy,
                 "scenario": self.scenario, "alpha": self.alpha,
-                "seed": self.seed, "variant": self.variant}
+                "seed": self.seed, "sampler_steps": self.sampler_steps,
+                "variant": self.variant}
 
 
 @dataclass(frozen=True)
@@ -91,6 +95,10 @@ class ExperimentSpec:
     scenarios: Tuple[str, ...] | None = None
     alphas: Tuple[float, ...] | None = None
     seeds: Tuple[int, ...] | None = None
+    #: AIGC sampler stride (RunConfig.sampler_steps): the quality/cost dial
+    #: of the diffusion dataplane. Inherits (base.sampler_steps,) like the
+    #: other axes, so oracle-only specs are unaffected.
+    sampler_steps: Tuple[int, ...] | None = None
     #: non-axis RunConfig fields shared by every cell (rounds, sizes, ...)
     base: RunConfig = field(default_factory=RunConfig)
     #: per-variant RunConfig overrides; accepts dicts, stored as sorted
@@ -101,7 +109,8 @@ class ExperimentSpec:
     def __post_init__(self):
         b = self.base
         axes = {"strategies": (b.strategy,), "scenarios": (b.scenario,),
-                "alphas": (b.alpha,), "seeds": (b.seed,)}
+                "alphas": (b.alpha,), "seeds": (b.seed,),
+                "sampler_steps": (b.sampler_steps,)}
         for axis, fallback in axes.items():
             if getattr(self, axis) is None:
                 object.__setattr__(self, axis, fallback)
@@ -110,9 +119,12 @@ class ExperimentSpec:
         object.__setattr__(self, "alphas",
                            tuple(float(a) for a in self.alphas))
         object.__setattr__(self, "seeds", tuple(int(s) for s in self.seeds))
+        object.__setattr__(self, "sampler_steps",
+                           tuple(int(s) for s in self.sampler_steps))
         object.__setattr__(self, "overrides",
                            _freeze_overrides(self.overrides))
-        for axis in ("strategies", "scenarios", "alphas", "seeds"):
+        for axis in ("strategies", "scenarios", "alphas", "seeds",
+                     "sampler_steps"):
             if not getattr(self, axis):
                 raise ValueError(f"axis {axis} is empty")
         # eager validation: constructing every cell runs RunConfig's
@@ -124,24 +136,27 @@ class ExperimentSpec:
     @property
     def n_cells(self) -> int:
         return (len(self.strategies) * len(self.scenarios)
-                * len(self.alphas) * len(self.seeds) * len(self.overrides))
+                * len(self.alphas) * len(self.seeds)
+                * len(self.sampler_steps) * len(self.overrides))
 
     def expand(self) -> List[Cell]:
         """Deterministic nested expansion: strategy (slowest) > scenario >
-        alpha > seed > override variant (fastest)."""
+        alpha > seed > sampler_steps > override variant (fastest)."""
         cells: List[Cell] = []
         i = 0
         for strat in self.strategies:
             for scen in self.scenarios:
                 for alpha in self.alphas:
                     for seed in self.seeds:
-                        for v, ov in enumerate(self.overrides):
-                            run = dataclasses.replace(
-                                self.base, strategy=strat, scenario=scen,
-                                alpha=alpha, seed=seed, **dict(ov))
-                            cells.append(Cell(i, strat, scen, alpha, seed,
-                                              v, run))
-                            i += 1
+                        for steps in self.sampler_steps:
+                            for v, ov in enumerate(self.overrides):
+                                run = dataclasses.replace(
+                                    self.base, strategy=strat, scenario=scen,
+                                    alpha=alpha, seed=seed,
+                                    sampler_steps=steps, **dict(ov))
+                                cells.append(Cell(i, strat, scen, alpha,
+                                                  seed, steps, v, run))
+                                i += 1
         return cells
 
     # ------------------------------------------------------------------
@@ -154,6 +169,7 @@ class ExperimentSpec:
                 "scenarios": list(self.scenarios),
                 "alphas": list(self.alphas),
                 "seeds": list(self.seeds),
+                "sampler_steps": list(self.sampler_steps),
             },
             "base": run_payload(self.base),
             "overrides": [dict(ov) for ov in self.overrides],
@@ -176,6 +192,10 @@ class ExperimentSpec:
                    scenarios=tuple(axes["scenarios"]),
                    alphas=tuple(axes["alphas"]),
                    seeds=tuple(axes["seeds"]),
+                   # absent in pre-axis artifacts: inherit from base
+                   sampler_steps=(tuple(axes["sampler_steps"])
+                                  if axes.get("sampler_steps") is not None
+                                  else None),
                    base=RunConfig(**payload["base"]),
                    overrides=tuple(payload["overrides"]))
 

@@ -205,17 +205,20 @@ class Sweep:
             plans: Dict[int, Any] = {}
 
             # group jax-planner cells by the only things the SUBP2-4 kernel
-            # reads besides the fleet: the (post-scenario) GenFVConfig and
-            # model_bits. numpy-planner cells keep the host reference.
+            # reads besides the fleet: the (post-scenario) GenFVConfig,
+            # model_bits and the generation service (cells with different
+            # measured/assumed t0 price eq. 48 differently and cannot share
+            # a dispatch). numpy-planner cells keep the host reference.
             groups: Dict[tuple, List[int]] = {}
             for i in active:
                 r = runners[i]
                 if r.run.planner == "jax":
-                    groups.setdefault((r.cfg, r.model_bits), []).append(i)
+                    groups.setdefault((r.cfg, r.model_bits, r.svc),
+                                      []).append(i)
                 else:
                     plans[i] = r.plan(pending[i])
             for key in sorted(groups, key=lambda k: groups[k][0]):
-                cfg, model_bits = key
+                cfg, model_bits, svc = key
                 idxs = groups[key]
                 with self.obs.span("sweep/plan_batched", key=len(idxs),
                                    round=t, fleets=len(idxs)):
@@ -223,6 +226,7 @@ class Sweep:
                         cfg, [pending[i].fleet for i in idxs], model_bits,
                         batches=cfg.local_steps,
                         b_prevs=[runners[i].b_prev for i in idxs],
+                        svc=svc,
                         alpha_overrides=[pending[i].alpha for i in idxs])
                 dispatches += 1
                 batched_fleets += len(idxs)

@@ -1,6 +1,9 @@
 """AIGC generation services for the GenFV server.
 
-Two implementations of the same interface `generate(labels, rng) -> images`:
+Implementations of the same interface
+`generate(labels, rng, round_idx=0) -> images` (the server passes
+`round_idx` only to generators that accept it, so bare two-arg generators
+keep working):
 
 * DDPMGenerator   — the real diffusion model (diffusion/ddpm.py), trained on
                     a public-style reference pool. Used in examples and the
@@ -21,15 +24,22 @@ from functools import lru_cache
 import numpy as np
 
 from repro.data.synthetic import IMG, _coarse_pattern, _fine_pattern
-from repro.diffusion import DDPM, ddpm_sample
+from repro.diffusion import DDPM
+
+#: every dataset's full class set (cifar100's 100 is the max) times a
+#: handful of fine_frac variants fits; beyond that, eviction beats the
+#: unbounded growth a multi-dataset sweep used to accumulate (each entry
+#: is a 12 KiB [32,32,3] float32 pattern).
+ORACLE_CACHE_SIZE = 512
 
 
-@lru_cache(maxsize=None)
+@lru_cache(maxsize=ORACLE_CACHE_SIZE)
 def _oracle_pattern(dataset: str, cls: int, fine_frac: float) -> np.ndarray:
-    """Degraded per-class pattern: full coarse shape, fine_frac of the
-    texture (same float op order as the original per-image computation)."""
+    """Degraded per-class pattern, keyed per (dataset, class, fine_frac):
+    full coarse shape, fine_frac of the texture (same float op order as the
+    original per-image computation)."""
     return (0.6 * _coarse_pattern(dataset, cls)
-            + (0.4 * fine_frac) * _fine_pattern(dataset, cls))
+            + (0.4 * float(fine_frac)) * _fine_pattern(dataset, cls))
 
 
 class OracleGenerator:
@@ -50,7 +60,8 @@ class OracleGenerator:
         self.fine_frac = fine_frac
         self.noise = noise
 
-    def generate(self, labels: np.ndarray, rng: np.random.Generator):
+    def generate(self, labels: np.ndarray, rng: np.random.Generator,
+                 round_idx: int = 0):
         """Vectorized: one batched pattern lookup + gather-roll instead of a
         per-image Python loop (this sits on the per-round hot path of every
         AIGC strategy). Bitwise-identical to the loop form: the rng draw
@@ -76,11 +87,28 @@ class OracleGenerator:
 
 
 class DDPMGenerator:
-    def __init__(self, params, ddpm: DDPM):
+    """Whole-schedule DDPM sampling with round-keyed streams.
+
+    Historically this drew its PRNGKey from the runner's shared numpy
+    Generator (`rng.integers(0, 2**31)`), which coupled generated images to
+    every prior consumer of that stream — checkpoint resume and the
+    vectorized/sequential paths replayed differently. It now derives the
+    round-``t`` stream from ``SeedSequence((seed, t, GEN_KEY))``
+    (gen/service.py, the fl/faults.py pattern) and never touches `rng`.
+    `BatchedDDPMGenerator` additionally fuses multi-vehicle schedules into
+    bucketed dispatches; this class keeps the one-dispatch-per-call shape
+    for direct use."""
+
+    def __init__(self, params, ddpm: DDPM, seed: int = 0,
+                 sampler_steps: int | None = None):
+        from repro.gen.service import BatchedDDPMGenerator
+        self._inner = BatchedDDPMGenerator(
+            params, ddpm, seed=seed,
+            sampler_steps=ddpm.timesteps if sampler_steps is None
+            else sampler_steps)
         self.params = params
         self.ddpm = ddpm
 
-    def generate(self, labels: np.ndarray, rng: np.random.Generator):
-        import jax
-        key = jax.random.PRNGKey(int(rng.integers(0, 2 ** 31)))
-        return np.asarray(ddpm_sample(self.params, self.ddpm, key, labels))
+    def generate(self, labels: np.ndarray, rng: np.random.Generator,
+                 round_idx: int = 0):
+        return self._inner.generate(labels, rng, round_idx=round_idx)

@@ -50,6 +50,12 @@ STRATEGIES = ("genfv", "fedavg", "no_emd", "madca", "ocean",
 #: SUBP2-4 backends understood by core/two_scale.py::plan_round.
 PLANNERS = ("jax", "numpy")
 
+#: AIGC services the round loop can serve SUBP4 schedules with: "oracle"
+#: is the procedural quality-gap sampler (pinned fast reference, bitwise
+#: frozen), "ddpm" the real batched diffusion dataplane (repro.gen) with
+#: measured per-image cost fed into the eq. 12-13 delay terms.
+GENERATORS = ("oracle", "ddpm")
+
 # moderate client lr: high-lr few-class local models drift into incompatible
 # basins and weight-average destructively
 CLIENT_LR = 5e-2
@@ -123,6 +129,12 @@ class RunConfig:
     # uses StreamConfig() defaults, which reproduce sync semantics). A plain
     # dict is coerced so checkpoint/spec payloads round-trip through JSON.
     stream: StreamConfig | None = None
+    # AIGC service (GENERATORS): "oracle" or "ddpm" (repro.gen dataplane).
+    generator: str = "oracle"
+    # DDIM-style stride of the DDPM's full noise schedule — the SUBP4
+    # quality/cost dial, swept as an ExperimentSpec axis. Ignored by the
+    # oracle (which has no denoising loop).
+    sampler_steps: int = 50
     # Observability handle (repro.obs): an `Obs` tracer/metrics registry,
     # or None for the zero-overhead null path. Excluded from equality,
     # hashing and serialization (`run_payload`) — two runs differing only
@@ -133,6 +145,12 @@ class RunConfig:
     def __post_init__(self):
         validate_run_fields(self.strategy, self.scenario, self.planner,
                             self.dataset, self.faults)
+        if self.generator not in GENERATORS:
+            raise ValueError(f"unknown generator {self.generator!r}; "
+                             f"valid: {', '.join(GENERATORS)}")
+        if self.sampler_steps < 1:
+            raise ValueError(
+                f"sampler_steps must be >= 1, got {self.sampler_steps}")
         if isinstance(self.stream, dict):
             # frozen dataclass: rehydrate a JSON payload in place
             object.__setattr__(self, "stream",
@@ -196,13 +214,16 @@ class GenFVRunner:
     #: manifest schema of `save_checkpoint` (bump on layout changes; v2
     #: added the RoundLog planner diagnostics bcd_iters/planner_converged,
     #: v3 the stale_dropped ledger column and the streaming-state block
-    #: `repro.fl.stream.StreamEngine` appends)
-    CKPT_SCHEMA = "repro.fl/runner-ckpt/v3"
+    #: `repro.fl.stream.StreamEngine` appends, v4 the "gen" block recording
+    #: the measured AIGC service so a resumed ddpm run replans against the
+    #: RECORDED t0 instead of re-measuring — re-measurement would jitter
+    #: eq. 48's b* and break bitwise resume)
+    CKPT_SCHEMA = "repro.fl/runner-ckpt/v4"
 
     def __init__(self, run: RunConfig, fl_cfg: GenFVConfig | None = None,
                  generator=None, engine: FleetEngine | None = None,
                  dataset_fn: Callable | None = None,
-                 faults: FaultSpec | None = None, obs=None):
+                 faults: FaultSpec | None = None, obs=None, svc=None):
         self.run = run
         # explicit obs overrides the RunConfig handle (Sweep injects a
         # cell-tagged view of its shared tracer); default is the null path
@@ -243,7 +264,27 @@ class GenFVRunner:
         # explicit None check: model_bits=0.0 is a legal override (free comms)
         self.model_bits = (run.model_bits if run.model_bits is not None
                            else n_params * 32.0)
-        gen = generator or OracleGenerator(run.dataset)
+        # AIGC service selection. `generator`/`svc` injections override the
+        # RunConfig (Sweep factories, tests); otherwise run.generator picks
+        # the dataplane. The oracle path keeps svc=None so plan_round
+        # constructs the assumed DiffusionService exactly as the seed did
+        # (bitwise-frozen reference); the ddpm path prices eq. 48 against
+        # the measured per-image wall-clock of the real sampler. Lazy
+        # imports: repro.gen reaches repro.exp.artifacts, which would cycle
+        # at module import time.
+        self.svc = svc
+        gen = generator
+        if gen is None:
+            if run.generator == "ddpm":
+                from repro.gen.calib import calibrated_service
+                from repro.gen.service import make_ddpm_generator
+                gen = make_ddpm_generator(run.dataset, classes, run.seed,
+                                          run.sampler_steps, obs=self.obs)
+                if self.svc is None:
+                    self.svc = calibrated_service(gen.params, gen.ddpm,
+                                                  run.sampler_steps)
+            else:
+                gen = OracleGenerator(run.dataset)
         self.server = GenFVServer(self.cnn_cfg, params, gen, self.rng)
         # max_bucket at the hard ceiling: fleet size is Poisson(num_vehicles),
         # so K can exceed the engine's conservative default cap; buckets
@@ -343,6 +384,7 @@ class GenFVRunner:
                            planner=self.run.planner, bucket=bucket):
             plan = plan_round(self.cfg, pending.fleet, self.model_bits,
                               self.cfg.local_steps, b_prev=self.b_prev,
+                              svc=self.svc,
                               alpha_override=pending.alpha,
                               planner=self.run.planner)
         return plan
@@ -461,7 +503,7 @@ class GenFVRunner:
                 counts = label_schedule(
                     plan.b_gen if use_fl else cfg.gen_batch * 4,
                     self.classes)
-                self.server.generate(counts)
+                self.server.generate(counts, round_idx=t)
                 aug, aug_loss = self.server.train_augmented(
                     cfg.local_steps * cfg.rsu_steps_factor, cfg.batch_size,
                     lr=CLIENT_LR)
@@ -756,6 +798,9 @@ class GenFVRunner:
             "rng": rng_state.copy(),
             "b_prev": np.int64(self.b_prev),
             "next_round": np.int64(self.next_round),
+            "gen": ({} if self.svc is None else
+                    {"t_image": np.float64(self.svc.t_per_image),
+                     "steps": np.int64(getattr(self.svc, "steps", 0))}),
             "params": self.server.params,
             "logs": self._logs_state(),
             "pool": ({} if self.server.pool_imgs is None else
@@ -815,6 +860,11 @@ class GenFVRunner:
             bytes(np.asarray(state["rng"], np.uint8)).decode())
         self.b_prev = int(state["b_prev"])
         self.next_round = int(state["next_round"])
+        g = state.get("gen", {})
+        if g:
+            from repro.gen.calib import MeasuredService
+            self.svc = MeasuredService(t_image=float(g["t_image"]),
+                                       steps=int(g["steps"]))
         self.server.params = jax.tree.map(jnp.asarray, state["params"])
         logs = state["logs"]
         names = [f.name for f in dataclasses.fields(RoundLog)]

@@ -20,13 +20,27 @@ class GenFVServer:
         self.rng = rng
         self.pool_imgs: np.ndarray | None = None   # accumulated AIGC data
         self.pool_labels: np.ndarray | None = None
+        # round-keyed generators (gen/service.py) take a round_idx kwarg;
+        # bare `generate(labels, rng)` generators (third-party factories)
+        # must keep working, so detect once here instead of try/except on
+        # the hot path
+        import inspect
+        try:
+            sig = inspect.signature(generator.generate)
+            self._gen_round_kw = "round_idx" in sig.parameters
+        except (TypeError, ValueError):
+            self._gen_round_kw = False
 
     # ---- model augmentation (step 5) -------------------------------------
-    def generate(self, label_counts: np.ndarray):
+    def generate(self, label_counts: np.ndarray, round_idx: int = 0):
         labels = np.repeat(np.arange(len(label_counts)), label_counts)
         if len(labels) == 0:
             return 0
-        imgs = self.generator.generate(labels, self.rng)
+        if self._gen_round_kw:
+            imgs = self.generator.generate(labels, self.rng,
+                                           round_idx=round_idx)
+        else:
+            imgs = self.generator.generate(labels, self.rng)
         if self.pool_imgs is None:
             self.pool_imgs, self.pool_labels = imgs, labels.astype(np.int32)
         else:

@@ -45,7 +45,7 @@ queue make the whole schedule a pure function of (RunConfig, StreamConfig)
 — same (seed, schedule) gives identical event order, commit sequence and
 final params on both planner backends, and checkpoints resume mid-stream
 bitwise (in-flight uploads and the clock persist in the
-`repro.fl/runner-ckpt/v3` layout under a `stream` block).
+`repro.fl/runner-ckpt/v4` layout under a `stream` block).
 
 Parity: with quorum=1.0, cadence 0 and no faults every rung-0 commit lands
 exactly on t_bar and `StreamEngine.run` is bitwise-equal to

@@ -1,0 +1,32 @@
+"""repro.gen — the AIGC dataplane (ROADMAP direction 2).
+
+Serves SUBP4 generation schedules with the *real* class-conditional DDPM
+(diffusion/ddpm.py) instead of the procedural oracle:
+
+* `sampler`  — bucketed, per-image-keyed, strided ancestral sampling: every
+  selected vehicle's per-label schedule rides ONE jitted dispatch, compiled
+  once per (bucket, sampler_steps) shape;
+* `service`  — `BatchedDDPMGenerator`, the round-keyed generator the round
+  loop plugs in for `RunConfig(generator="ddpm")`;
+* `calib`    — measured per-image sampling latency, cached per device in a
+  ``repro.gen/calib/v1`` artifact, feeding the eq. 12-13 delay terms;
+* `pretrain` — the reference-pool DDPM training loop + checkpoint.
+
+Design notes: DESIGN.md §"AIGC dataplane".
+"""
+from repro.gen.calib import (CALIB_SCHEMA, MeasuredService, calibrated_service,
+                             load_calibration, measure_t_per_image,
+                             save_calibration)
+from repro.gen.pretrain import (DDPM_CKPT_SCHEMA, load_pretrained,
+                                pretrain_ddpm)
+from repro.gen.sampler import sample_schedule, strided_timesteps
+from repro.gen.service import (GEN_KEY, BatchedDDPMGenerator, gen_round_key,
+                               make_ddpm_generator, runner_ddpm)
+
+__all__ = [
+    "BatchedDDPMGenerator", "CALIB_SCHEMA", "DDPM_CKPT_SCHEMA", "GEN_KEY",
+    "MeasuredService", "calibrated_service", "gen_round_key",
+    "load_calibration", "load_pretrained", "make_ddpm_generator",
+    "measure_t_per_image", "pretrain_ddpm", "runner_ddpm", "sample_schedule",
+    "save_calibration", "strided_timesteps",
+]

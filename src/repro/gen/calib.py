@@ -1,0 +1,129 @@
+"""Measured per-image generation cost feeding the eq. 12-13 delay terms.
+
+The seed prices eq. 48's b* with `DiffusionService`'s *assumed* cycle model
+(t0 = steps * d_cycles / f_rsu). With a real sampler in the loop we can do
+better: time the actual bucketed dispatch on this device and hand the
+planner a `MeasuredService` whose ``t_per_image`` is the realized
+steady-state (post-compile) wall-clock per image. `PlannerConsts` carries
+t0 as a traced device scalar, so swapping the assumed service for a
+measured one changes no jit cache keys — the planner recompiles nothing.
+
+Measurements are cached in a ``repro.gen/calib/v1`` JSON artifact under
+`artifact_dir()` (REPRO_ARTIFACTS-aware), keyed per (device backend, model
+shape, sampler_steps, bucket): two runners on the same host share one
+calibration, and a checkpoint-resumed runner restores the *recorded* t0
+from the run checkpoint instead of re-measuring — re-measurement would
+jitter the planner inputs and break bitwise resume (DESIGN.md §"AIGC
+dataplane").
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from dataclasses import dataclass
+
+import jax
+
+from repro.diffusion.ddpm import DDPM
+from repro.exp.artifacts import artifact_dir
+from repro.gen.sampler import sample_schedule
+from repro.gen.service import gen_round_key
+
+CALIB_SCHEMA = "repro.gen/calib/v1"
+CALIB_FILE = "gen_calib.json"
+
+#: bucket the runner calibrates at — the steady-state schedule size for
+#: default fleets (eq.-48 b* across ~8-16 selected vehicles).
+CALIB_BUCKET = 16
+CALIB_REPEATS = 3
+
+
+@dataclass(frozen=True)
+class MeasuredService:
+    """Drop-in for `core.generation.DiffusionService` backed by a measured
+    per-image latency. Frozen + hashable: it rides planner lru caches and
+    sweep group keys like the assumed service does."""
+    t_image: float                  # realized seconds per image
+    steps: int = 50                 # sampler_steps it was measured at
+    source: str = "measured"
+
+    @property
+    def t_per_image(self) -> float:
+        """t0 in eq. (12)."""
+        return self.t_image
+
+
+def _calib_key(ddpm: DDPM, sampler_steps: int, bucket: int) -> str:
+    dev = jax.devices()[0]
+    return "/".join(map(str, (jax.default_backend(), dev.device_kind,
+                              ddpm.timesteps, ddpm.num_classes,
+                              ddpm.base_width, sampler_steps, bucket)))
+
+
+def measure_t_per_image(params, ddpm: DDPM, sampler_steps: int,
+                        bucket: int = CALIB_BUCKET,
+                        repeats: int = CALIB_REPEATS) -> float:
+    """Steady-state seconds per image of the bucketed dispatch: one warmup
+    call absorbs compilation, then the best of `repeats` timed calls
+    (min filters scheduler noise, the standard microbenchmark estimator)."""
+    labels = [i % ddpm.num_classes for i in range(bucket)]
+    key = gen_round_key(0, 0)
+    sample_schedule(params, ddpm, key, labels, sampler_steps)   # warmup
+    best = float("inf")
+    for _ in range(max(1, repeats)):
+        t0 = time.perf_counter()
+        sample_schedule(params, ddpm, key, labels, sampler_steps)
+        best = min(best, time.perf_counter() - t0)
+    return best / bucket
+
+
+def _calib_path(directory: str | None = None) -> str:
+    return os.path.join(artifact_dir(directory), CALIB_FILE)
+
+
+def load_calibration(directory: str | None = None) -> dict:
+    """The calibration table {key: {t_image, measured_at...}}; empty on a
+    missing/foreign file."""
+    path = _calib_path(directory)
+    if not os.path.exists(path):
+        return {}
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError):
+        return {}
+    if doc.get("schema") != CALIB_SCHEMA:
+        return {}
+    return doc.get("entries", {})
+
+
+def save_calibration(entries: dict, directory: str | None = None) -> str:
+    """Rewrite the calibration artifact (sorted keys: byte-stable for
+    unchanged content, like every repro.exp artifact)."""
+    from repro.obs import host_meta
+    path = _calib_path(directory)
+    doc = {"schema": CALIB_SCHEMA, "host": host_meta(), "entries": entries}
+    with open(path, "w") as f:
+        json.dump(doc, f, sort_keys=True, indent=1)
+        f.write("\n")
+    return path
+
+
+def calibrated_service(params, ddpm: DDPM, sampler_steps: int,
+                       bucket: int = CALIB_BUCKET,
+                       directory: str | None = None) -> MeasuredService:
+    """The measured service of (device, ddpm, sampler_steps, bucket):
+    cache hit returns without touching the sampler, miss measures once and
+    persists."""
+    key = _calib_key(ddpm, sampler_steps, bucket)
+    entries = load_calibration(directory)
+    hit = entries.get(key)
+    if hit is not None:
+        return MeasuredService(t_image=float(hit["t_image"]),
+                               steps=int(sampler_steps))
+    t_image = measure_t_per_image(params, ddpm, sampler_steps, bucket)
+    entries[key] = {"t_image": t_image, "bucket": int(bucket),
+                    "sampler_steps": int(sampler_steps)}
+    save_calibration(entries, directory)
+    return MeasuredService(t_image=t_image, steps=int(sampler_steps))

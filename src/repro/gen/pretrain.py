@@ -1,0 +1,139 @@
+"""Reference-pool DDPM pretraining (ROADMAP direction 2, paper Sec. III-B).
+
+The RSU pretrains the class-conditional DDPM once on a small reference pool
+(the paper's "AIGC model deployed at the RSU"), then serves every round's
+SUBP4 schedule from it. The loop is DETERMINISTIC end to end — the pool,
+the init key, the batch index stream, and the per-step loss keys are all
+derived from ``SeedSequence((seed, lane, PRETRAIN_KEY))`` — so any process
+(a fresh runner, a checkpoint resume, another sweep cell) that pretrains
+with the same arguments reconstructs bitwise-identical params, and the
+generator itself never needs to ride the runner checkpoint.
+
+Checkpointing (``repro.gen/ddpm-ckpt/v1`` via `checkpoint/io.py`) is for
+*amortization* across processes: `load_pretrained` validates the manifest
+fingerprint (ddpm shape + pretrain budget) before restoring.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.io import read_manifest, restore_tree, save_tree
+from repro.data.synthetic import DATASET_CLASSES, make_image_dataset
+from repro.diffusion.ddpm import DDPM, ddpm_loss, make_ddpm
+from repro.optim import adamw, constant_schedule
+
+DDPM_CKPT_SCHEMA = "repro.gen/ddpm-ckpt/v1"
+
+#: domain tag of the pretraining streams ("PRET"); lanes 0/1 split init
+#: from batch selection.
+PRETRAIN_KEY = 0x50524554
+
+
+def _pretrain_fingerprint(ddpm: DDPM, dataset: str, steps: int,
+                          ref_size: int, batch: int, lr: float,
+                          seed: int) -> dict:
+    return {"dataset": dataset, "timesteps": ddpm.timesteps,
+            "num_classes": ddpm.num_classes, "base_width": ddpm.base_width,
+            "beta_min": ddpm.beta_min, "beta_max": ddpm.beta_max,
+            "steps": int(steps), "ref_size": int(ref_size),
+            "batch": int(batch), "lr": float(lr), "seed": int(seed)}
+
+
+def pretrain_ddpm(ddpm: DDPM, dataset: str = "cifar10", steps: int = 80,
+                  ref_size: int = 512, batch: int = 32, lr: float = 2e-4,
+                  seed: int = 0, ckpt_path: str | None = None,
+                  obs=None) -> Tuple[dict, list]:
+    """Train `ddpm` on a reference pool of `dataset`; returns
+    (params, per-step losses). If `ckpt_path` is given the result is
+    checkpointed there (and a matching existing checkpoint short-circuits
+    the loop entirely)."""
+    if dataset not in DATASET_CLASSES:
+        raise ValueError(f"unknown dataset {dataset!r}")
+    if DATASET_CLASSES[dataset] != ddpm.num_classes:
+        raise ValueError(f"{dataset} has {DATASET_CLASSES[dataset]} classes"
+                         f" but ddpm.num_classes={ddpm.num_classes}")
+    fp = _pretrain_fingerprint(ddpm, dataset, steps, ref_size, batch, lr,
+                               seed)
+    if ckpt_path is not None:
+        params = _try_restore(ckpt_path, fp)
+        if params is not None:
+            return params, []
+
+    ss_init, ss_batch = (np.random.SeedSequence(
+        entropy=(int(seed), lane, PRETRAIN_KEY)) for lane in (0, 1))
+    init_key = jnp.asarray(ss_init.generate_state(2, np.uint32))
+    params = make_ddpm(init_key, ddpm)
+
+    imgs, labels = make_image_dataset(dataset, ref_size, seed=seed,
+                                      noise=0.15)
+    imgs, labels = jnp.asarray(imgs), jnp.asarray(labels)
+
+    opt = adamw(constant_schedule(lr))
+    opt_state = opt.init(params)
+
+    @jax.jit
+    def step(p, st, k, bi, bl):
+        loss, g = jax.value_and_grad(ddpm_loss, argnums=0)(p, ddpm, k, bi,
+                                                           bl)
+        p, st = opt.update(g, st, p)
+        return p, st, loss
+
+    rng = np.random.default_rng(ss_batch)
+    losses = []
+    span = (obs.span("gen/pretrain", key=(ddpm.base_width, steps),
+                     dataset=dataset, steps=steps)
+            if obs is not None and obs.enabled else None)
+    try:
+        if span is not None:
+            span.__enter__()
+        for s in range(steps):
+            ix = rng.integers(0, len(labels), batch)
+            ks = jax.random.fold_in(init_key, s + 1)
+            params, opt_state, loss = step(params, opt_state, ks, imgs[ix],
+                                           labels[ix])
+            losses.append(float(loss))
+        if span is not None:
+            span.sync = params
+    finally:
+        if span is not None:
+            span.__exit__(None, None, None)
+
+    params = jax.tree.map(np.asarray, params)
+    if ckpt_path is not None:
+        save_tree(ckpt_path, params,
+                  metadata={"schema": DDPM_CKPT_SCHEMA, "pretrain": fp,
+                            "final_loss": losses[-1] if losses else None})
+    return params, losses
+
+
+def _try_restore(path: str, fp: dict):
+    import os
+    if not path.endswith(".npz"):
+        path += ".npz"
+    if not os.path.exists(path):
+        return None
+    meta = read_manifest(path)["metadata"]
+    if meta.get("schema") != DDPM_CKPT_SCHEMA or meta.get("pretrain") != fp:
+        return None
+    return restore_tree(path)
+
+
+def load_pretrained(path: str, ddpm: DDPM) -> dict:
+    """Restore a ``repro.gen/ddpm-ckpt/v1`` checkpoint, validating schema
+    and model-shape fingerprint against `ddpm`."""
+    if not path.endswith(".npz"):
+        path += ".npz"
+    meta = read_manifest(path)["metadata"]
+    if meta.get("schema") != DDPM_CKPT_SCHEMA:
+        raise ValueError(f"not a DDPM checkpoint: schema="
+                         f"{meta.get('schema')!r}")
+    fp = meta.get("pretrain", {})
+    for field in ("timesteps", "num_classes", "base_width"):
+        if fp.get(field) != getattr(ddpm, field):
+            raise ValueError(f"checkpoint {field}={fp.get(field)} does not "
+                             f"match ddpm.{field}={getattr(ddpm, field)}")
+    return restore_tree(path)

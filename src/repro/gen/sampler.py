@@ -1,0 +1,127 @@
+"""Bucketed batched DDPM sampling with per-image key streams.
+
+The seed's `ddpm_sample` threads ONE key chain over its whole batch
+(`diffusion/ddpm.py::_sample_loop` splits the carry key once per step), so
+the noise an image receives depends on which batch it rides in — sampling
+vehicle schedules one label at a time and sampling them fused give
+different images. This module makes the per-image computation a pure
+function of (params, base_key, global image index, label):
+
+* **per-image keys** — step noise for image ``i`` at denoising position
+  ``s`` is drawn from ``fold_in(fold_in(base_key, i), s)`` (initial x_T
+  uses the out-of-range position tag ``sampler_steps``). The UNet itself is
+  per-sample (GroupNorm normalizes each image alone, attention attends
+  within an image), so no op mixes batch rows and the math is independent
+  of batch composition.
+* **bucketing** — schedules pad to the power-of-two bucket family of
+  `core/planner.py::bucket_size` (floor 4, shared with the fleet engine),
+  so jit compiles once per (bucket, sampler_steps) instead of once per
+  distinct schedule size, and the bucket family is bitwise-consistent on
+  XLA:CPU (tests/test_gen.py pins batched == per-label-loop parity).
+  Padded slots burn finite throwaway compute on label 0 and are sliced off.
+* **strided schedule** — ``sampler_steps`` subsamples the full
+  ``ddpm.timesteps`` noise schedule DDIM-style (eta=1: the ancestral
+  posterior over the subsequence of alpha-bars), the quality/cost dial
+  SUBP4 prices generation against.
+
+Design notes: DESIGN.md §"AIGC dataplane".
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.core.planner import bucket_size
+from repro.diffusion.ddpm import DDPM
+from repro.diffusion.unet import unet_apply
+
+
+def strided_timesteps(timesteps: int, sampler_steps: int) -> np.ndarray:
+    """Ascending subsequence of ``sampler_steps`` timesteps out of
+    ``[0, timesteps)``, endpoints included (the DDIM stride)."""
+    if not 1 <= sampler_steps <= timesteps:
+        raise ValueError(f"sampler_steps={sampler_steps} outside "
+                         f"[1, {timesteps}]")
+    if sampler_steps == 1:
+        ts = np.array([timesteps - 1])
+    else:
+        ts = np.round(np.linspace(0.0, timesteps - 1, sampler_steps))
+    ts = ts.astype(np.int64)
+    if len(np.unique(ts)) != len(ts):   # linspace step >= 1: cannot happen
+        raise ValueError("strided schedule collapsed to duplicate timesteps")
+    return ts
+
+
+def _per_image_noise(base_key, idx, pos_tag, shape):
+    """[B]-batched N(0,1) noise keyed (base_key, global index, position)."""
+    keys = jax.vmap(
+        lambda i: jax.random.fold_in(jax.random.fold_in(base_key, i),
+                                     pos_tag))(idx)
+    return jax.vmap(lambda k: jax.random.normal(k, shape))(keys)
+
+
+@partial(jax.jit, static_argnums=(1, 4))
+def _sample_strided(params, ddpm: DDPM, base_key, y, sampler_steps: int,
+                    idx):
+    """Strided (eta=1) ancestral sampling, per-image keyed.
+
+    y [B] int labels, idx [B] global image indices. Compiled once per
+    (bucket B, sampler_steps); ddpm is static (frozen dataclass).
+    """
+    ts = jnp.asarray(strided_timesteps(ddpm.timesteps, sampler_steps))
+    abars = ddpm.alpha_bars()
+    B = y.shape[0]
+
+    x = _per_image_noise(base_key, idx, jnp.int32(sampler_steps),
+                         (32, 32, 3))
+
+    def body(s, x):
+        i = sampler_steps - 1 - s            # descending position in ts
+        t = ts[i]
+        abar_t = abars[t]
+        abar_prev = jnp.where(i > 0, abars[ts[jnp.maximum(i - 1, 0)]], 1.0)
+        tb = jnp.full((B,), t, jnp.int32)
+        eps_hat = unet_apply(params, x, tb, y)
+        x0_hat = (x - jnp.sqrt(1.0 - abar_t) * eps_hat) / jnp.sqrt(abar_t)
+        # eta=1 posterior variance over the strided subsequence; at the
+        # full stride this is the eq. (1) ancestral posterior
+        var = ((1.0 - abar_prev) / (1.0 - abar_t)
+               * (1.0 - abar_t / abar_prev))
+        sigma = jnp.sqrt(jnp.maximum(var, 0.0))
+        dir_x = jnp.sqrt(jnp.maximum(1.0 - abar_prev - sigma ** 2, 0.0))
+        mean = jnp.sqrt(abar_prev) * x0_hat + dir_x * eps_hat
+        noise = _per_image_noise(base_key, idx, i.astype(jnp.int32),
+                                 (32, 32, 3))
+        return mean + jnp.where(i > 0, sigma, 0.0) * noise
+
+    x = lax.fori_loop(0, sampler_steps, body, x)
+    return jnp.clip(x, -1.0, 1.0)
+
+
+def sample_schedule(params, ddpm: DDPM, base_key, labels,
+                    sampler_steps: int, start: int = 0,
+                    bucket: int | None = None) -> np.ndarray:
+    """Sample one (possibly multi-vehicle, multi-label) schedule in ONE
+    jitted dispatch. Image ``j`` of the returned array is a pure function
+    of (params, base_key, start + j, labels[j]) — callers slicing a big
+    schedule into per-label or per-vehicle dispatches with matching
+    ``start`` offsets reproduce it bitwise (tests/test_gen.py).
+
+    `bucket` overrides the power-of-two padding (parity tests use it)."""
+    labels = np.asarray(labels, np.int32)
+    n = len(labels)
+    if n == 0:
+        return np.empty((0, 32, 32, 3), np.float32)
+    kb = bucket_size(n) if bucket is None else int(bucket)
+    if kb < n:
+        raise ValueError(f"bucket {kb} smaller than schedule {n}")
+    y = np.zeros(kb, np.int32)
+    y[:n] = labels
+    idx = np.arange(start, start + kb, dtype=np.uint32)
+    out = _sample_strided(params, ddpm, base_key, jnp.asarray(y),
+                          int(sampler_steps), jnp.asarray(idx))
+    return np.asarray(out[:n], np.float32)

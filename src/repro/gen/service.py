@@ -1,0 +1,128 @@
+"""Round-keyed AIGC generation service for the GenFV round loop.
+
+`BatchedDDPMGenerator` is the `RunConfig(generator="ddpm")` implementation
+of the server's generator interface: every round's full SUBP4 schedule —
+all selected vehicles' per-label counts concatenated by `label_schedule` —
+is sampled in ONE bucketed jitted dispatch (gen/sampler.py).
+
+Determinism contract (mirrors fl/faults.py): the sampling stream of round
+``t`` is keyed ``SeedSequence((seed, t, GEN_KEY))`` and the generator never
+touches the runner's shared numpy Generator — so generation is a pure
+function of (pretrained params, run seed, round, schedule), identical
+across vectorized/sequential paths and across checkpoint resume. The
+oracle keeps consuming the shared stream in the seed's order, which is what
+keeps `generator="oracle"` runs bitwise-unchanged.
+"""
+from __future__ import annotations
+
+from functools import lru_cache
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.planner import bucket_size
+from repro.diffusion.ddpm import DDPM
+from repro.gen.pretrain import pretrain_ddpm
+from repro.gen.sampler import sample_schedule
+from repro.obs import NULL_OBS
+
+#: domain tag of the generation key stream ("AIGC"), keeping it disjoint
+#: from every other (seed, round)-keyed stream in the repo (fl/faults.py
+#: uses 0x52545259 "RTRY" for upload retries).
+GEN_KEY = 0x41494743
+
+#: the RSU "foundation model" served for `RunConfig(generator="ddpm")`:
+#: the paper's 200-step noise schedule (Sec. VI-A2), a width the container
+#: CPU can pretrain and sample in test time. `RunConfig.sampler_steps`
+#: strides this schedule at sampling time.
+RUNNER_TIMESTEPS = 200
+RUNNER_BASE_WIDTH = 16
+#: reference-pool pretraining budget (gen/pretrain.py); deliberately seeded
+#: at 0 independent of the run seed — one pretrained generator stands in
+#: for the RSU's foundation model across every cell of a sweep, while the
+#: per-round sampling streams stay keyed by the run seed.
+PRETRAIN_SEED = 0
+PRETRAIN_STEPS = 80
+PRETRAIN_REF = 512
+
+
+def gen_round_key(seed: int, round_idx: int):
+    """Raw PRNG key of round ``round_idx``'s sampling stream."""
+    ss = np.random.SeedSequence(
+        entropy=(int(seed), int(round_idx), GEN_KEY))
+    return jnp.asarray(ss.generate_state(2, np.uint32))
+
+
+def runner_ddpm(num_classes: int) -> DDPM:
+    return DDPM(timesteps=RUNNER_TIMESTEPS, num_classes=num_classes,
+                base_width=RUNNER_BASE_WIDTH)
+
+
+@lru_cache(maxsize=4)
+def _pretrained_params(dataset: str, num_classes: int, timesteps: int,
+                       base_width: int, steps: int, ref_size: int,
+                       seed: int):
+    """One reference-pool pretraining per configuration per process;
+    deterministic (fixed seed + keyed batch stream), so every runner —
+    including a resumed one — reconstructs bitwise-identical params and
+    the generator itself needs no checkpointing. The full budget is part
+    of the cache key so a test-shrunk configuration never aliases the
+    default one."""
+    ddpm = DDPM(timesteps=timesteps, num_classes=num_classes,
+                base_width=base_width)
+    params, _ = pretrain_ddpm(ddpm, dataset=dataset, steps=steps,
+                              ref_size=ref_size, seed=seed)
+    return params, ddpm
+
+
+class BatchedDDPMGenerator:
+    """The real diffusion service behind `RunConfig(generator="ddpm")`.
+
+    `generate` ignores the shared numpy Generator argument (interface
+    compatibility with the oracle) and draws from the round-keyed stream
+    instead; `rounds.py` threads the round index through
+    `GenFVServer.generate`."""
+
+    def __init__(self, params, ddpm: DDPM, seed: int,
+                 sampler_steps: int = 50, obs=None):
+        self.params = params
+        self.ddpm = ddpm
+        self.seed = int(seed)
+        self.sampler_steps = int(sampler_steps)
+        self.obs = obs if obs is not None else NULL_OBS
+
+    def generate(self, labels: np.ndarray, rng: np.random.Generator,
+                 round_idx: int = 0) -> np.ndarray:
+        labels = np.asarray(labels, np.int32)
+        n = len(labels)
+        if n == 0:
+            return np.empty((0, 32, 32, 3), np.float32)
+        base_key = gen_round_key(self.seed, round_idx)
+        bucket = bucket_size(n)
+        obs = self.obs
+        if obs.enabled:
+            obs.count("gen/images", n)
+            obs.observe("gen/pad_waste", bucket - n)
+        # span key mirrors the sampler's jit cache key: first dispatch per
+        # (bucket, steps) tags as "compile"
+        with obs.span("round/generate/sample",
+                      key=(bucket, self.sampler_steps), round=round_idx,
+                      images=n, bucket=bucket,
+                      steps=self.sampler_steps) as sp:
+            imgs = sample_schedule(self.params, self.ddpm, base_key, labels,
+                                   self.sampler_steps)
+            sp.sync = imgs                  # host ndarray: already fenced
+        return imgs
+
+
+def make_ddpm_generator(dataset: str, num_classes: int, seed: int,
+                        sampler_steps: int, obs=None) -> BatchedDDPMGenerator:
+    """The runner's `generator="ddpm"` factory: pretrained (cached) params
+    + round-keyed sampling streams. Reads the module-level budget constants
+    at call time (tests shrink them via monkeypatch)."""
+    params, ddpm = _pretrained_params(dataset, num_classes,
+                                      RUNNER_TIMESTEPS, RUNNER_BASE_WIDTH,
+                                      PRETRAIN_STEPS, PRETRAIN_REF,
+                                      PRETRAIN_SEED)
+    return BatchedDDPMGenerator(params, ddpm, seed=seed,
+                                sampler_steps=sampler_steps, obs=obs)

@@ -1,0 +1,360 @@
+"""repro.gen — the AIGC dataplane (batched sampler, round-keyed service,
+calibration, pretrain checkpoint, sweep axis, runner integration)."""
+import os
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+import repro.gen.service as gen_service
+from repro.configs.base import GenFVConfig
+from repro.core.generation import label_schedule
+from repro.diffusion.ddpm import DDPM, make_ddpm
+from repro.exp.spec import ExperimentSpec
+from repro.fl.generator import ORACLE_CACHE_SIZE, OracleGenerator, \
+    _oracle_pattern
+from repro.fl.rounds import GenFVRunner, RunConfig
+from repro.gen.calib import (CALIB_BUCKET, MeasuredService, _calib_key,
+                             calibrated_service, load_calibration,
+                             save_calibration)
+from repro.gen.pretrain import load_pretrained, pretrain_ddpm
+from repro.gen.sampler import sample_schedule, strided_timesteps
+from repro.gen.service import (BatchedDDPMGenerator, gen_round_key,
+                               make_ddpm_generator)
+
+TINY = DDPM(timesteps=8, num_classes=4, base_width=8)
+
+#: shrunk "foundation model" budget for the runner-integration tests: the
+#: deterministic pretrain contract doesn't care about scale, and the
+#: service's lru key includes the full budget so these never alias the
+#: real defaults.
+TINY_BUDGET = dict(RUNNER_TIMESTEPS=8, RUNNER_BASE_WIDTH=8,
+                   PRETRAIN_STEPS=2, PRETRAIN_REF=64)
+
+FAST = dict(rounds=3, train_size=300, test_size=32, width_mult=0.0625)
+FAST_CFG = GenFVConfig(batch_size=8, local_steps=2, num_vehicles=6)
+
+
+@pytest.fixture(scope="module")
+def tiny_params():
+    return make_ddpm(jax.random.PRNGKey(0), TINY)
+
+
+def _use_tiny_service(monkeypatch, tmp_path):
+    """Shrink the ddpm dataplane for runner tests: tiny model + pretrain
+    budget, calibration redirected to tmp and PRE-SEEDED with the paper's
+    assumed t0 — so eq. 48's b* stays at oracle scale and no wall-clock
+    measurement (nondeterministic across runs) enters the test."""
+    for k, v in TINY_BUDGET.items():
+        monkeypatch.setattr(gen_service, k, v)
+    monkeypatch.setenv("REPRO_ARTIFACTS", str(tmp_path / "artifacts"))
+    ddpm = DDPM(timesteps=TINY_BUDGET["RUNNER_TIMESTEPS"], num_classes=10,
+                base_width=TINY_BUDGET["RUNNER_BASE_WIDTH"])
+    key = _calib_key(ddpm, 2, CALIB_BUCKET)
+    save_calibration({key: {"t_image": 0.05, "bucket": CALIB_BUCKET,
+                            "sampler_steps": 2}})
+    return ddpm
+
+
+def _ddpm_run(**over):
+    kw = dict(strategy="genfv", seed=0, generator="ddpm", sampler_steps=2,
+              **FAST)
+    kw.update(over)
+    return RunConfig(**kw)
+
+
+# ---------------------------------------------------------------------------
+# strided schedule
+# ---------------------------------------------------------------------------
+def test_strided_timesteps_endpoints():
+    ts = strided_timesteps(200, 5)
+    assert ts[0] == 0 and ts[-1] == 199
+    assert list(ts) == sorted(set(ts))
+    assert np.array_equal(strided_timesteps(200, 200), np.arange(200))
+    assert list(strided_timesteps(8, 1)) == [7]
+
+
+def test_strided_timesteps_rejects_bad_counts():
+    with pytest.raises(ValueError):
+        strided_timesteps(200, 0)
+    with pytest.raises(ValueError):
+        strided_timesteps(200, 201)
+
+
+# ---------------------------------------------------------------------------
+# batched sampler: bitwise parity + schedule conservation
+# ---------------------------------------------------------------------------
+def test_batched_matches_per_label_loop_bitwise(tiny_params):
+    """One fused dispatch over a multi-label schedule == the per-label
+    reference loop, bit for bit, because every image's noise is keyed by
+    its global schedule index (not its batch position)."""
+    key = gen_round_key(seed=5, round_idx=2)
+    counts = np.array([2, 0, 3, 1])          # includes an empty label
+    labels = np.repeat(np.arange(4), counts).astype(np.int32)
+
+    fused = sample_schedule(tiny_params, TINY, key, labels, 4)
+
+    parts, off = [], 0
+    for lab, c in enumerate(counts):
+        if c == 0:
+            continue
+        parts.append(sample_schedule(tiny_params, TINY, key,
+                                     [lab] * int(c), 4, start=off))
+        off += int(c)
+    assert np.array_equal(fused, np.concatenate(parts))
+
+
+def test_bucket_padding_is_bitwise_neutral(tiny_params):
+    key = gen_round_key(seed=1, round_idx=0)
+    labels = [0, 1, 2, 3, 0, 1]
+    a = sample_schedule(tiny_params, TINY, key, labels, 4, bucket=8)
+    b = sample_schedule(tiny_params, TINY, key, labels, 4, bucket=32)
+    assert np.array_equal(a, b)
+
+
+def test_generator_schedule_conservation(tiny_params):
+    """Eq.-48 conservation: the generator returns exactly the b* images of
+    the label schedule, per label — including b=0, b < num_classes (extras
+    land on the first classes) and the single-label edge."""
+    gen = BatchedDDPMGenerator(tiny_params, TINY, seed=0, sampler_steps=2)
+    rng = np.random.default_rng(0)
+    for b in (0, 1, 3, 11):
+        counts = label_schedule(b, TINY.num_classes)
+        assert counts.sum() == b
+        labels = np.repeat(np.arange(TINY.num_classes), counts)
+        imgs = gen.generate(labels, rng, round_idx=0)
+        assert imgs.shape == (b, 32, 32, 3)
+        got = np.bincount(labels[: len(imgs)], minlength=TINY.num_classes)
+        assert np.array_equal(got, counts)
+    # single-label schedule
+    imgs = gen.generate(np.full(5, 2, np.int32), rng, round_idx=1)
+    assert imgs.shape == (5, 32, 32, 3)
+
+
+def test_generate_is_round_keyed_and_rng_silent(tiny_params):
+    """Same (seed, round) -> bitwise-identical images regardless of the
+    shared numpy stream's state; different rounds diverge; the shared
+    stream is never consumed (the checkpoint-resume contract)."""
+    gen = BatchedDDPMGenerator(tiny_params, TINY, seed=3, sampler_steps=2)
+    labels = np.array([0, 1, 1, 2])
+
+    rng = np.random.default_rng(0)
+    state_before = rng.bit_generator.state
+    a = gen.generate(labels, rng, round_idx=7)
+    assert rng.bit_generator.state == state_before
+
+    rng.normal(size=100)                     # perturb the shared stream
+    b = gen.generate(labels, rng, round_idx=7)
+    assert np.array_equal(a, b)
+
+    c = gen.generate(labels, rng, round_idx=8)
+    assert not np.array_equal(a, c)
+
+
+def test_gen_round_key_distinct_per_seed_and_round():
+    keys = {tuple(np.asarray(gen_round_key(s, t)))
+            for s in range(3) for t in range(3)}
+    assert len(keys) == 9
+
+
+# ---------------------------------------------------------------------------
+# oracle satellite: bounded pattern cache, round_idx pass-through
+# ---------------------------------------------------------------------------
+def test_oracle_pattern_cache_bounded():
+    info = _oracle_pattern.cache_info()
+    assert info.maxsize == ORACLE_CACHE_SIZE is not None
+    for f in np.linspace(0.0, 1.0, ORACLE_CACHE_SIZE + 40):
+        _oracle_pattern("cifar10", 0, float(f))
+    assert _oracle_pattern.cache_info().currsize <= ORACLE_CACHE_SIZE
+
+
+def test_oracle_round_kwarg_is_bitwise_neutral():
+    gen = OracleGenerator("cifar10")
+    labels = np.array([0, 1, 2])
+    a = gen.generate(labels, np.random.default_rng(9))
+    b = gen.generate(labels, np.random.default_rng(9), round_idx=5)
+    assert np.array_equal(a, b)
+
+
+# ---------------------------------------------------------------------------
+# calibration artifact
+# ---------------------------------------------------------------------------
+def test_calibration_roundtrip_and_cache_hit(tiny_params, monkeypatch,
+                                             tmp_path):
+    monkeypatch.setenv("REPRO_ARTIFACTS", str(tmp_path))
+    svc = calibrated_service(tiny_params, TINY, sampler_steps=2, bucket=4)
+    assert svc.t_per_image > 0 and svc.steps == 2
+    entries = load_calibration()
+    assert len(entries) == 1
+
+    # second lookup must hit the artifact, not the sampler
+    import repro.gen.calib as calib
+    monkeypatch.setattr(calib, "measure_t_per_image",
+                        lambda *a, **k: pytest.fail("re-measured on hit"))
+    again = calibrated_service(tiny_params, TINY, sampler_steps=2, bucket=4)
+    assert again == svc
+
+
+def test_calibration_ignores_foreign_file(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_ARTIFACTS", str(tmp_path))
+    path = tmp_path / "gen_calib.json"
+    path.write_text('{"schema": "something/else", "entries": {"x": {}}}')
+    assert load_calibration() == {}
+
+
+# ---------------------------------------------------------------------------
+# pretrain: determinism + checkpoint
+# ---------------------------------------------------------------------------
+def test_pretrain_deterministic_and_checkpointed(tmp_path):
+    ddpm = DDPM(timesteps=8, num_classes=10, base_width=8)
+    ck = str(tmp_path / "ddpm")
+    p1, losses = pretrain_ddpm(ddpm, steps=2, ref_size=32, ckpt_path=ck)
+    assert len(losses) == 2
+    # a second call restores from the checkpoint (no training: empty losses)
+    p2, losses2 = pretrain_ddpm(ddpm, steps=2, ref_size=32, ckpt_path=ck)
+    assert losses2 == []
+    # and a from-scratch rerun reconstructs the same params bitwise
+    p3, _ = pretrain_ddpm(ddpm, steps=2, ref_size=32)
+    for a, b, c in zip(jax.tree.leaves(p1), jax.tree.leaves(p2),
+                       jax.tree.leaves(p3)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+        assert np.array_equal(np.asarray(a), np.asarray(c))
+
+    restored = load_pretrained(ck, ddpm)
+    assert len(jax.tree.leaves(restored)) == len(jax.tree.leaves(p1))
+    with pytest.raises(ValueError):
+        load_pretrained(ck, DDPM(timesteps=16, num_classes=10, base_width=8))
+
+
+def test_pretrain_rejects_class_mismatch():
+    with pytest.raises(ValueError):
+        pretrain_ddpm(DDPM(num_classes=7), steps=1, ref_size=8)
+
+
+# ---------------------------------------------------------------------------
+# ExperimentSpec sampler_steps axis
+# ---------------------------------------------------------------------------
+def test_spec_sampler_steps_axis():
+    spec = ExperimentSpec(name="steps", sampler_steps=(2, 8),
+                          base=RunConfig(**FAST))
+    assert spec.n_cells == 2
+    cells = spec.expand()
+    assert [c.run.sampler_steps for c in cells] == [2, 8]
+    assert [c.sampler_steps for c in cells] == [2, 8]
+    assert cells[0].coords()["sampler_steps"] == 2
+
+    again = ExperimentSpec.from_json(spec.to_json())
+    assert again.to_json() == spec.to_json()
+
+
+def test_spec_sampler_steps_inherits_and_loads_old_payloads():
+    spec = ExperimentSpec(base=RunConfig(sampler_steps=25, **FAST))
+    assert spec.sampler_steps == (25,)
+    payload = spec.to_payload()
+    del payload["axes"]["sampler_steps"]     # pre-axis artifact
+    old = ExperimentSpec.from_payload(payload)
+    assert old.sampler_steps == (25,)
+
+
+def test_run_config_validates_generator_fields():
+    with pytest.raises(ValueError):
+        RunConfig(generator="gan")
+    with pytest.raises(ValueError):
+        RunConfig(sampler_steps=0)
+
+
+# ---------------------------------------------------------------------------
+# runner integration: end-to-end ddpm rounds, one dispatch per round,
+# measured svc in the planner, bitwise golden resume
+# ---------------------------------------------------------------------------
+def test_ddpm_runner_end_to_end_one_dispatch_per_round(monkeypatch,
+                                                       tmp_path):
+    _use_tiny_service(monkeypatch, tmp_path)
+    calls = []
+    real = gen_service.sample_schedule
+    monkeypatch.setattr(gen_service, "sample_schedule",
+                        lambda *a, **k: (calls.append(1), real(*a, **k))[1])
+
+    runner = GenFVRunner(_ddpm_run(), fl_cfg=FAST_CFG)
+    assert isinstance(runner.server.generator, BatchedDDPMGenerator)
+    assert isinstance(runner.svc, MeasuredService)
+    assert runner.svc.t_per_image == 0.05    # the pre-seeded calibration
+    res = runner.train()
+
+    assert len(res.logs) == FAST["rounds"]
+    gen_rounds = sum(1 for l in res.logs if l.b_gen > 0)
+    assert gen_rounds > 0
+    # exactly ONE batched sampling dispatch per generating round
+    assert len(calls) == gen_rounds
+    assert all(np.isfinite(l.accuracy) for l in res.logs)
+
+
+def test_ddpm_runner_golden_resume_bitwise(monkeypatch, tmp_path):
+    """Kill after round 1, resume from the checkpoint in a fresh runner:
+    the remaining rounds replay bitwise, with the planner pricing eq. 48
+    against the RECORDED t0 (a poisoned calibration file on the resume
+    host must not perturb the replanned rounds)."""
+    ddpm = _use_tiny_service(monkeypatch, tmp_path)
+    run = _ddpm_run()
+    ck = str(tmp_path / "runner.npz")
+
+    golden_runner = GenFVRunner(run, fl_cfg=FAST_CFG)
+    golden = golden_runner.train()
+
+    first = GenFVRunner(run, fl_cfg=FAST_CFG)
+    first.run_round(0)
+    first.save_checkpoint(ck)
+
+    # resume on a "different host": calibration now claims another t0
+    key = _calib_key(ddpm, run.sampler_steps, CALIB_BUCKET)
+    save_calibration({key: {"t_image": 0.9, "bucket": CALIB_BUCKET,
+                            "sampler_steps": run.sampler_steps}})
+    resumed = GenFVRunner(run, fl_cfg=FAST_CFG)
+    assert resumed.svc.t_per_image == 0.9
+    resumed.load_checkpoint(ck)
+    assert resumed.svc.t_per_image == 0.05   # checkpoint overrode it
+    res = resumed.train()
+
+    assert [vars(a) for a in res.logs] == [vars(g) for g in golden.logs]
+    for a, g in zip(jax.tree.leaves(resumed.server.params),
+                    jax.tree.leaves(golden_runner.server.params)):
+        assert np.array_equal(np.asarray(a), np.asarray(g))
+
+
+def test_ddpm_generator_factory_is_deterministic(monkeypatch, tmp_path):
+    _use_tiny_service(monkeypatch, tmp_path)
+    g1 = make_ddpm_generator("cifar10", 10, seed=0, sampler_steps=2)
+    g2 = make_ddpm_generator("cifar10", 10, seed=0, sampler_steps=2)
+    assert g1.params is g2.params            # in-process lru share
+    labels = np.array([0, 5, 9])
+    rng = np.random.default_rng(0)
+    assert np.array_equal(g1.generate(labels, rng, round_idx=2),
+                          g2.generate(labels, rng, round_idx=2))
+
+
+def test_oracle_runner_has_no_measured_service():
+    runner = GenFVRunner(RunConfig(**FAST), fl_cfg=FAST_CFG)
+    assert runner.svc is None
+    assert isinstance(runner.server.generator, OracleGenerator)
+
+
+# ---------------------------------------------------------------------------
+# bench smoke (tier-1 CI surface of benchmarks/bench_gen.py)
+# ---------------------------------------------------------------------------
+def test_bench_gen_quick_smoke(tmp_path):
+    import json
+    out = tmp_path / "BENCH_gen.json"
+    env = dict(os.environ, PYTHONPATH="src",
+               REPRO_ARTIFACTS=str(tmp_path / "artifacts"))
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.bench_gen", "--quick",
+         "--out", str(out)],
+        cwd=os.path.join(os.path.dirname(__file__), ".."),
+        env=env, capture_output=True, text=True, timeout=900)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    doc = json.loads(out.read_text())
+    assert doc["quick"] is True
+    assert doc["results"]["throughput"]
+    assert doc["results"]["batched_vs_sequential"]["speedup"] > 1.0

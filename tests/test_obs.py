@@ -324,6 +324,41 @@ def test_runner_obs_bitwise_no_perturbation(planner, faults):
         assert a == b                           # every field, bitwise
 
 
+def test_runner_obs_bitwise_ddpm_generate_path(monkeypatch, tmp_path):
+    """Same invariant on the AIGC dataplane: the tracer's span around the
+    batched sampling dispatch (`round/generate/sample`) and its gen
+    counters are read-only, so a ddpm run is bitwise identical with and
+    without an attached Obs — and the span actually fires."""
+    import repro.gen.service as gen_service
+    from repro.gen.calib import CALIB_BUCKET, _calib_key, save_calibration
+    from repro.diffusion.ddpm import DDPM
+
+    for k, v in (("RUNNER_TIMESTEPS", 8), ("RUNNER_BASE_WIDTH", 8),
+                 ("PRETRAIN_STEPS", 2), ("PRETRAIN_REF", 64)):
+        monkeypatch.setattr(gen_service, k, v)
+    monkeypatch.setenv("REPRO_ARTIFACTS", str(tmp_path / "artifacts"))
+    ddpm = DDPM(timesteps=8, num_classes=10, base_width=8)
+    save_calibration({_calib_key(ddpm, 2, CALIB_BUCKET):
+                      {"t_image": 0.05, "bucket": CALIB_BUCKET,
+                       "sampler_steps": 2}})
+
+    run = RunConfig(strategy="genfv", seed=0, generator="ddpm",
+                    sampler_steps=2, **FAST)
+    obs = Obs(meta={"test": "obs-gen"})
+    traced = GenFVRunner(run, fl_cfg=FAST_CFG, obs=obs).train()
+    plain = GenFVRunner(run, fl_cfg=FAST_CFG).train()
+    assert len(plain.logs) == FAST["rounds"]
+    for a, b in zip(plain.logs, traced.logs):
+        assert a == b                           # every field, bitwise
+    gen_rounds = sum(1 for l in traced.logs if l.b_gen > 0)
+    assert gen_rounds > 0
+    spans = [d for d in obs.metrics.payload()["dists"]
+             if d["name"] == "span/round/generate/sample"]
+    assert spans and sum(d["n"] for d in spans) == gen_rounds
+    assert obs.metrics.counter_value("gen/images") == \
+        sum(int(l.b_gen) for l in traced.logs)
+
+
 def test_roundlog_carries_planner_convergence():
     _, res = _traced("jax", None)
     for log in res.logs:
